@@ -1,0 +1,70 @@
+"""Fig. 1 analogue: softmax fraction of attention runtime vs sequence length.
+
+The paper profiles BERT-Large on a Volta GPU and shows softmax growing to a
+large runtime fraction at long sequence lengths. We reproduce the *shape* of
+that claim on CPU: measure matmul (QK^T + AV) time vs softmax time of a
+single attention layer across sequence lengths, for the e-base baseline and
+for softermax (base-2 + online).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.softermax as sm
+
+H, D = 16, 64
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    for S in (128, 256, 512, 1024):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(1, H, S, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, H, S, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, H, S, D)), jnp.float32)
+
+        mm1 = jax.jit(lambda q, k: jnp.einsum("bhqd,bhkd->bhqk", q, k))
+        soft_e = jax.jit(lambda s: sm.softmax_e(s))
+        soft_2 = jax.jit(lambda s: sm.softermax(s))
+        mm2 = jax.jit(lambda p, v: jnp.einsum("bhqk,bhkd->bhqd", p, v))
+
+        s = mm1(q, k)
+        p = soft_e(s)
+        t_mm = _time(mm1, q, k) + _time(mm2, p, v)
+        t_soft_e = _time(soft_e, s)
+        t_soft_2 = _time(soft_2, s)
+        rows.append({
+            "seq_len": S,
+            "matmul_us": t_mm * 1e6,
+            "softmax_e_us": t_soft_e * 1e6,
+            "softermax_us": t_soft_2 * 1e6,
+            "softmax_frac_baseline": t_soft_e / (t_soft_e + t_mm),
+            "softmax_frac_softermax": t_soft_2 / (t_soft_2 + t_mm),
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"fig1,seq={r['seq_len']},"
+              f"{r['softmax_e_us']:.0f},"
+              f"frac_baseline={r['softmax_frac_baseline']:.3f},"
+              f"frac_softermax={r['softmax_frac_softermax']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

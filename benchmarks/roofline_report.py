@@ -1,0 +1,91 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/**.json).
+
+Renders EXPERIMENTS.md §Roofline rows: the three terms (seconds), dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs ratio, roofline fraction — per
+(arch × shape × mesh).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def _upgrade(r):
+    """Recompute roofline terms with analytic FLOPs for artifacts written
+    before launch/analytic.py existed (no recompile needed)."""
+    if r.get("skipped") or r["roofline"].get("analytic_flops"):
+        return r
+    from repro.configs.base import ALL_SHAPES
+    from repro.launch.analytic import analytic_flops
+    from repro.launch.roofline import Roofline
+    from repro.models.registry import get_config
+    shape = {s.name: s for s in ALL_SHAPES}[r["shape"]]
+    cfg = get_config(r["arch"])
+    rf = r["roofline"]
+    roof = Roofline(
+        flops_per_chip=rf["flops_per_chip"],
+        bytes_per_chip=rf["bytes_per_chip"],
+        collective_per_chip=rf["collective_per_chip"],
+        chips=rf["chips"],
+        model_flops=rf["model_flops"],
+        collective_breakdown=rf["collective_breakdown"],
+        analytic_flops=analytic_flops(cfg, shape),
+    )
+    r["roofline"] = roof.to_dict()
+    return r
+
+
+def load(mesh="16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(_upgrade(json.load(f)))
+    return rows
+
+
+def render(mesh="16x16"):
+    lines = []
+    for r in load(mesh):
+        if r.get("skipped"):
+            lines.append(f"roofline,{mesh},{r['arch']},{r['shape']},SKIP")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"roofline,{mesh},{r['arch']},{r['shape']},"
+            f"compute={rf['compute_s']:.4g}s,memory={rf['memory_s']:.4g}s,"
+            f"collective={rf['collective_s']:.4g}s,dom={rf['dominant']},"
+            f"useful={rf['useful_flops_ratio']:.3f},"
+            f"frac={rf['roofline_fraction']:.4f}")
+    return lines
+
+
+def markdown_table(mesh="16x16"):
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOPs ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP | — | — |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} | "
+            f"{rf['memory_s']:.4g} | {rf['collective_s']:.4g} | "
+            f"{rf['dominant']} | {rf['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        if os.path.isdir(os.path.join(ART, mesh)):
+            for line in render(mesh):
+                print(line)
+
+
+if __name__ == "__main__":
+    main()

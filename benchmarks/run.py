@@ -1,0 +1,64 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline report.
+
+Prints ``name,...`` CSV lines. Heavy pieces (table3 finetune proxy) accept a
+--fast flag used by CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_breakdown, fig5_sweep, roofline_report,
+                            table1_bitwidth_ablation, table3_accuracy,
+                            table4_efficiency)
+
+    t0 = time.time()
+    print("# Table IV — unit/PE area+energy (analytical 7nm model vs paper)")
+    table4_efficiency.main()
+
+    print("# Fig 5 — PE energy vs sequence length (model + measured)")
+    fig5_sweep.main()
+
+    print("# Fig 1 — softmax runtime fraction vs sequence length (measured)")
+    fig1_breakdown.main()
+
+    print("# Table I ablation — accuracy vs bitwidths (beyond-paper)")
+    table1_bitwidth_ablation.main()
+
+    print("# Table III — softermax-aware finetuning accuracy proxy")
+    if args.fast:
+        print("table3,skipped(fast)")
+    else:
+        table3_accuracy.main()
+
+    print("# Roofline (baseline sharding) — from dry-run artifacts")
+    roofline_report.main()
+
+    import os
+    if os.path.isdir("artifacts/dryrun_opt"):
+        print("# Roofline (optimized: --optimized sweep, §Perf)")
+        os.environ["DRYRUN_ART"] = "artifacts/dryrun_opt"
+        import importlib
+        importlib.reload(roofline_report)
+        roofline_report.main()
+        os.environ.pop("DRYRUN_ART")
+        importlib.reload(roofline_report)
+
+        print("# Perf comparison (baseline vs optimized, §Perf)")
+        from benchmarks import perf_compare
+        for mesh in ("16x16", "2x16x16"):
+            if os.path.isdir(os.path.join("artifacts/dryrun", mesh)):
+                perf_compare.main(mesh)
+
+    print(f"# total_bench_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Beyond-paper ablation of the Table-I bitwidths.
+
+The paper fixes one operating point (Inp Q(6,2), Unnormed Q(1,15), PowSum
+Q(10,6), Recip/Outp Q(1,7)). This sweep varies the output/reciprocal and
+unnormed precisions and reports softmax error vs the exact base-2 softmax —
+the accuracy-per-bit curve a hardware team would use to re-cost the units
+(each dropped bit shrinks the Normalization Unit datapath linearly).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+import repro.core.softermax as sm
+
+
+def run(rows=256, V=384, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, V)) * 4, jnp.float32)
+    exact = sm.softmax_base2(x)
+    out = []
+    for out_frac in (4, 5, 6, 7, 8, 10):
+        for un_frac in (7, 11, 15):
+            bw = quant.SoftermaxBitwidths(
+                unnormed=quant.QFormat(1, un_frac, signed=False),
+                recip=quant.QFormat(1, out_frac, signed=False),
+                outp=quant.QFormat(1, out_frac, signed=False),
+            )
+            y = sm.softermax_fixed(x, bitwidths=bw)
+            err = float(jnp.abs(y - exact).max())
+            mean_err = float(jnp.abs(y - exact).mean())
+            out.append({
+                "out_bits": 1 + out_frac, "unnormed_bits": 1 + un_frac,
+                "max_err": err, "mean_err": mean_err,
+            })
+    return out
+
+
+def main():
+    for r in run():
+        print(f"table1_ablation,out_bits={r['out_bits']},"
+              f"unnormed_bits={r['unnormed_bits']},"
+              f"max_err={r['max_err']:.5f},mean_err={r['mean_err']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

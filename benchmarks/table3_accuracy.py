@@ -1,0 +1,79 @@
+"""Table III analogue: Softermax-aware finetuning recovers accuracy.
+
+The paper finetunes BERT on GLUE/SQuAD with softermax and reports parity
+with the quantized baseline. Offline, we run the scaled proxy: pretrain a
+small BERT-family transformer with standard softmax on the synthetic LM
+task, then "finetune" three variants — standard softmax, softermax (float),
+and softermax_fixed (bit-faithful Table-I fixed point with STE) — and report
+final eval losses. The claim checked: softermax variants land within noise
+of the baseline (paper: <0.5% worst-case drop; average ~0 or better).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.data import SyntheticLMData
+from repro.models.registry import get_config, model_fns, reduce_config
+from repro.train import make_train_step
+
+SEQ, BATCH = 64, 16
+
+
+def _eval_loss(fns, params, cfg, n=4, seed=77):
+    data = SyntheticLMData(cfg.vocab_size, SEQ, BATCH, seed=seed)
+    tot = 0.0
+    for _ in range(n):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        loss, _ = fns.loss(params, batch)
+        tot += float(loss)
+    return tot / n
+
+
+def run(pretrain_steps=60, finetune_steps=40):
+    base_cfg = reduce_config(get_config("bert-base")).replace(
+        causal=True,                       # LM proxy task
+        softmax_impl="softmax")
+    fns = model_fns(base_cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    tc = TrainConfig(total_steps=pretrain_steps, warmup_steps=5,
+                     learning_rate=3e-3)
+    step = jax.jit(make_train_step(fns.loss, tc))
+    data = SyntheticLMData(base_cfg.vocab_size, SEQ, BATCH, seed=1)
+    from repro.optim import adamw
+    opt = adamw.init_state(params)
+    for _ in range(pretrain_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, _ = step(params, opt, batch)
+
+    results = {}
+    for impl in ("softmax", "softermax", "softermax_fixed"):
+        cfg_i = base_cfg.replace(softmax_impl=impl)
+        fns_i = model_fns(cfg_i)
+        tc_f = TrainConfig(total_steps=finetune_steps, warmup_steps=2,
+                           learning_rate=1e-3)
+        step_i = jax.jit(make_train_step(fns_i.loss, tc_f))
+        p_i, o_i = params, adamw.init_state(params)
+        ft_data = SyntheticLMData(base_cfg.vocab_size, SEQ, BATCH, seed=2)
+        for _ in range(finetune_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(ft_data).items()}
+            p_i, o_i, _ = step_i(p_i, o_i, batch)
+        results[impl] = _eval_loss(fns_i, p_i, cfg_i)
+    # zero-shot drop-in (no softermax-aware finetuning) for contrast
+    cfg_z = base_cfg.replace(softmax_impl="softermax_fixed")
+    results["softermax_fixed_no_finetune"] = _eval_loss(
+        model_fns(cfg_z), params, cfg_z)
+    return results
+
+
+def main():
+    r = run()
+    base = r["softmax"]
+    for k, v in r.items():
+        print(f"table3,{k},{v:.4f},delta_vs_baseline={v - base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: production-grade JAX framework implementing Softermax
+(Stevens et al., 2021) — hardware/software co-designed softmax for
+Transformers — as a first-class feature of a multi-pod training/serving
+stack."""
+
+__version__ = "1.0.0"

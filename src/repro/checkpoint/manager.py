@@ -1,0 +1,167 @@
+"""Checkpoint manager: atomic, retained, mesh-agnostic (elastic) restore.
+
+Save: the full train state (params, optimizer m/v/step, data-iterator state,
+metadata) is flattened to path-keyed arrays and written as .npz into a
+temp dir, then atomically renamed to ``step_<n>``. A retention policy prunes
+old checkpoints. Writes go through a background thread so the train loop is
+not blocked (async checkpointing).
+
+Restore: arrays are loaded host-side and ``device_put`` with whatever
+sharding the *current* mesh prescribes — a checkpoint written on a 16×16
+mesh restores onto 2×16×16 (or a single CPU) unchanged. That property is the
+elastic-rescale story: restart at a different pod count re-shards on load.
+
+On a real multi-host fleet the save path would write per-host shards with a
+global index (same layout as Orbax); this single-process implementation
+gathers to host first but keeps the identical on-disk contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.logging import get_logger
+
+log = get_logger("checkpoint")
+
+_SEP = "//"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in paths_leaves:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any],
+             extra_meta: Optional[Dict] = None) -> None:
+        """state: {"params": tree, "opt": tree, "data": dict, ...}"""
+        flat: Dict[str, np.ndarray] = {}
+        meta = {"step": int(step), "keys": {}, **(extra_meta or {})}
+        for name, tree in state.items():
+            leaves = jax.tree_util.tree_leaves(tree)
+            if all(isinstance(l, (int, float, str, bool, type(None)))
+                   for l in leaves):
+                meta[name] = tree  # plain metadata (e.g. data-iterator state)
+                continue
+            sub = _flatten(tree)
+            meta["keys"][name] = sorted(sub.keys())
+            flat.update({f"{name}{_SEP}{k}": v for k, v in sub.items()})
+
+        self.wait()  # one in-flight save at a time
+
+        def _write():
+            try:
+                t0 = time.time()
+                tmp = os.path.join(self.dir, f".tmp_step_{step}")
+                final = os.path.join(self.dir, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump(meta, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._retain()
+                log.info("saved checkpoint step=%d (%.2fs)", step,
+                         time.time() - t0)
+            except BaseException as e:  # surfaced on next wait()/save()
+                self._exc = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, templates: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None
+                ) -> Dict[str, Any]:
+        """templates: same-structure trees (arrays or ShapeDtypeStructs);
+        shardings: optional same-structure NamedSharding trees per name —
+        arrays are device_put to them (mesh-agnostic restore)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        npz = np.load(os.path.join(path, "arrays.npz"))
+        out: Dict[str, Any] = {"meta": meta}
+        for name, template in templates.items():
+            if name in meta and name not in meta["keys"]:
+                out[name] = meta[name]
+                continue
+            prefix = f"{name}{_SEP}"
+            flat = {k[len(prefix):]: npz[k] for k in npz.files
+                    if k.startswith(prefix)}
+            tree = _unflatten_into(template, flat)
+            if shardings and name in shardings and shardings[name] is not None:
+                tree = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings[name])
+            out[name] = tree
+        return out

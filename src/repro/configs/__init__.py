@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned arch) + config dataclasses."""
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                MLAConfig, ModelConfig, MoEConfig,
+                                PREFILL_32K, ShapeConfig, SSMConfig,
+                                TRAIN_4K, TrainConfig)

@@ -1,0 +1,15 @@
+"""granite-3-8b — dense, GQA kv=8. [hf:ibm-granite/granite-3.0-8b-base]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,          # not 256-divisible: padded to 49408 for TP
+    activation="silu",
+    rope_theta=10000.0,
+)

@@ -1,0 +1,18 @@
+"""llama3.2-3b — small llama3, GQA kv=8, tied embeddings.
+[hf:meta-llama/Llama-3.2-3B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    activation="silu",
+    tie_embeddings=True,
+    rope_theta=500000.0,
+)

@@ -1,0 +1,10 @@
+"""Core: the paper's contribution — Softermax algorithm family, fixed-point
+numerics, and the analytical hardware cost model.
+
+Import the submodules directly; function names intentionally are NOT
+re-exported at package level (``softermax`` is both a module and its main
+function): ``from repro.core.softermax import softermax``.
+"""
+
+from repro.core import energy_model, numerics, quant  # noqa: F401
+from repro.core import softermax as _softermax_module  # noqa: F401

@@ -1,0 +1,292 @@
+"""Analytical 7nm area/energy model for the Softermax hardware units (§IV, §VI.B).
+
+There is no silicon in this repo, so the paper's Table IV / Fig. 5 are
+reproduced through an explicit op-count × per-op-cost model:
+
+* Per-op energy/area constants start from Horowitz (ISSCC'14, 45nm) scaled to
+  a 7nm-class node, with the DesignWare fp16 transcendental units costed as
+  timing-closed synthesis results (an fp16 exp/divider closed at ~1 GHz is
+  several times the energy of a raw textbook datapath — this matches the
+  paper's observation that general-purpose exp units carry large LUT and
+  control overheads).
+* Op counts are derived from the algorithm structures in
+  ``core/softermax.py``. The pass-count asymmetry matters: the baseline makes
+  an explicit max pass then an exp+accumulate pass; Softermax fuses them
+  (online normalization), so per-element pipeline/control energy (``REG_E``)
+  is paid twice by the baseline and once by Softermax.
+* Unit-level comparisons (Table IV rows 1-2) cover the datapaths only;
+  PE-level (row 3, Fig. 5) adds MACs, scratchpad traffic and buffer area,
+  with a MAGNet-style reduction slice of ``d_per_pe`` MACs per score per PE.
+
+Calibration status vs the paper (asserted in tests/benchmarks):
+  unnormed unit  — area 0.25 (paper 0.25), energy ~0.08 (paper 0.10)
+  normalization  — area ~0.58 (paper 0.65), energy ~0.38 (paper 0.39)
+  full PE        — area ~0.90 (paper 0.90), energy ~0.47 (paper 0.43)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Per-op costs. Energy in pJ, area in um^2, 7nm-class estimates (see module
+# docstring for provenance).
+# ---------------------------------------------------------------------------
+
+ENERGY_PJ: Dict[str, float] = {
+    # narrow fixed point (softermax datapath)
+    "int8_cmp": 0.008,       # IntMax ceil+compare
+    "int8_mul": 0.056,
+    "int16_add": 0.014,      # Q(10,6) accumulate
+    "shift16": 0.005,
+    "lut4_read": 0.004,      # 4-entry c-LUT / reciprocal LUT
+    # DesignWare-style fp16, timing-closed
+    "fp16_add": 0.18,
+    "fp16_cmp": 0.15,
+    "fp16_mul": 0.50,
+    "fp16_div": 2.60,
+    "fp16_exp": 2.20,        # range-reduce mul + LUT64 + interp + control
+    # per-element, per-pass pipeline registers + control (both designs)
+    "reg_pass": 0.20,
+    # memory
+    "sram_rd_byte": 0.25,
+    "sram_wr_byte": 0.30,
+    # int8 MAC (multiply + 24b accumulate)
+    "int8_mac": 0.078,
+}
+
+AREA_UM2: Dict[str, float] = {
+    "int8_cmp": 4.0,
+    "int8_mul": 35.0,
+    "int16_add": 10.0,
+    "shift16": 6.0,
+    "lut4": 8.0,
+    "fp16_add": 65.0,
+    "fp16_cmp": 30.0,
+    "fp16_mul": 160.0,
+    "fp16_div": 420.0,
+    "fp16_exp": 360.0,
+    "reg_lane": 136.0,       # pipeline regs + control per lane (both designs)
+    "int8_mac": 48.0,
+    "sram_per_kb": 650.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitCosts:
+    energy_uj: float
+    area_um2: float
+    breakdown: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# Unit-level models (Table IV, rows 1-2). Datapath only — no scratchpads.
+# ---------------------------------------------------------------------------
+
+
+def baseline_unnormed_unit(rows: int, V: int, width: int = 32) -> UnitCosts:
+    """DesignWare-style fp16 max+exp+accumulate over a (rows, V) matrix.
+
+    Two explicit passes: (1) max scan, (2) subtract-max + exp + accumulate.
+    """
+    n = rows * V
+    e = ENERGY_PJ
+    energy = {
+        "max_cmp": n * e["fp16_cmp"],
+        "sub_max": n * e["fp16_add"],
+        "exp": n * e["fp16_exp"],
+        "acc": n * e["fp16_add"],
+        "pipeline": n * 2 * e["reg_pass"],  # two passes
+    }
+    area = (
+        width * (AREA_UM2["fp16_cmp"] + AREA_UM2["fp16_exp"] + AREA_UM2["fp16_add"]
+                 + AREA_UM2["reg_lane"])
+        + (width - 1) * AREA_UM2["fp16_add"]  # adder tree
+    )
+    return UnitCosts(sum(energy.values()) * 1e-6, area, energy)
+
+
+def softermax_unnormed_unit(rows: int, V: int, width: int = 32) -> UnitCosts:
+    """Softermax Unnormed Softmax Unit: IntMax + PowerOfTwo(LPW) + Reduction.
+
+    Single fused pass (online normalization); per-slice shift renormalization.
+    """
+    n = rows * V
+    slices = rows * max(V // width, 1)
+    e = ENERGY_PJ
+    energy = {
+        "ceil_cmp": n * e["int8_cmp"],
+        "lut_pow2": n * e["lut4_read"],
+        "shift_pow2": n * e["shift16"],
+        "acc": n * e["int16_add"],
+        "renorm_shift": slices * (e["shift16"] + e["int16_add"]),
+        "pipeline": n * 1 * e["reg_pass"],  # one fused pass
+    }
+    area = (
+        width * (AREA_UM2["int8_cmp"] + AREA_UM2["lut4"] + AREA_UM2["shift16"]
+                 + AREA_UM2["reg_lane"])
+        + (width - 1) * AREA_UM2["int16_add"]
+        + AREA_UM2["shift16"] + AREA_UM2["int16_add"]  # running-sum renorm path
+    )
+    return UnitCosts(sum(energy.values()) * 1e-6, area, energy)
+
+
+def baseline_norm_unit(rows: int, V: int, width: int = 32) -> UnitCosts:
+    """Baseline normalization: per-row fp16 reciprocal (DW divider) + per-
+    element fp16 multiply."""
+    n = rows * V
+    e = ENERGY_PJ
+    energy = {
+        "row_recip": rows * e["fp16_div"],
+        "mul": n * e["fp16_mul"],
+        "pipeline": n * e["reg_pass"],
+    }
+    area = (
+        width * (AREA_UM2["fp16_mul"] + AREA_UM2["reg_lane"])
+        + AREA_UM2["fp16_div"]
+    )
+    return UnitCosts(sum(energy.values()) * 1e-6, area, energy)
+
+
+def softermax_norm_unit(rows: int, V: int, width: int = 32) -> UnitCosts:
+    """Softermax Normalization Unit: shift renorm + LPW reciprocal + int8 mul."""
+    n = rows * V
+    e = ENERGY_PJ
+    energy = {
+        "renorm_shift": n * e["shift16"],
+        "recip_lpw": rows * (e["lut4_read"] + e["int8_mul"] + e["int16_add"]),
+        "mul": n * e["int8_mul"],
+        "pipeline": n * e["reg_pass"],
+    }
+    area = (
+        width * (AREA_UM2["shift16"] + AREA_UM2["int8_mul"] + AREA_UM2["reg_lane"])
+        + AREA_UM2["lut4"] + AREA_UM2["int8_mul"] + AREA_UM2["int16_add"]
+    )
+    return UnitCosts(sum(energy.values()) * 1e-6, area, energy)
+
+
+# ---------------------------------------------------------------------------
+# PE-level model (Table IV row 3, Fig. 5).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PEConfig:
+    """MAGNet-style PE (paper Table II). ``d_per_pe`` is the slice of the
+    attention reduction dimension each PE owns (the d=64 dot product is
+    spread across PEs; partial sums meet in the accumulation collector)."""
+
+    vector_size: int = 32
+    n_lanes: int = 32
+    d_per_pe: int = 8
+    input_buffer_kb: int = 32
+    weight_buffer_kb: int = 128
+    accum_collector_kb: int = 12
+
+
+def _softmax_sram_traffic(rows: int, V: int, softmax: str) -> float:
+    """Scratchpad traffic (pJ) for the softmax portion at PE level.
+
+    Baseline reads the fp16 scores twice (max pass + exp pass); Softermax
+    reads int8 scores once. Both write/read unnormed numerators and write the
+    output (fp16 for baseline, Q(1,7)=1B for softermax).
+    """
+    n = rows * V
+    e = ENERGY_PJ
+    if softmax == "baseline":
+        return n * (2 * 2 * e["sram_rd_byte"]      # 2 passes x fp16
+                    + 2 * e["sram_wr_byte"]        # numerators out
+                    + 2 * e["sram_rd_byte"]        # numerators back in
+                    + 2 * e["sram_wr_byte"])       # fp16 result
+    return n * (1 * e["sram_rd_byte"]              # one int8 pass
+                + 2 * e["sram_wr_byte"]            # Q(1,15) numerators
+                + 2 * e["sram_rd_byte"]            # numerators back in
+                + 1 * e["sram_wr_byte"])           # Q(1,7) result
+
+
+def pe_costs(seq_len: int, softmax: str, cfg: PEConfig = PEConfig()) -> UnitCosts:
+    """Energy/area of SELF+Softmax on one PE (the paper's Fig.-5 workload).
+
+    Score matrix rows×V = seq_len×seq_len; each PE contributes ``d_per_pe``
+    MACs per score (weight-stationary, operands from local buffers with 2x
+    reuse), then runs softmax over its rows.
+    """
+    rows, V = seq_len, seq_len
+    e = ENERGY_PJ
+    n_scores = rows * V
+    mac_energy = n_scores * cfg.d_per_pe * e["int8_mac"]
+    mm_traffic = n_scores * cfg.d_per_pe * e["sram_rd_byte"] * 0.5  # 2x reuse
+    if softmax == "baseline":
+        u = baseline_unnormed_unit(rows, V, cfg.vector_size)
+        nrm = baseline_norm_unit(rows, V, cfg.vector_size)
+    elif softmax == "softermax":
+        u = softermax_unnormed_unit(rows, V, cfg.vector_size)
+        nrm = softermax_norm_unit(rows, V, cfg.vector_size)
+    else:
+        raise ValueError(softmax)
+    energy = {
+        "mac": mac_energy,
+        "mm_traffic": mm_traffic,
+        "softmax_compute": (u.energy_uj + nrm.energy_uj) * 1e6,
+        "softmax_traffic": _softmax_sram_traffic(rows, V, softmax),
+    }
+    sram_kb = cfg.input_buffer_kb + cfg.weight_buffer_kb + cfg.accum_collector_kb
+    area = (
+        cfg.vector_size * cfg.n_lanes * AREA_UM2["int8_mac"]
+        + sram_kb * AREA_UM2["sram_per_kb"]
+        + u.area_um2
+        + nrm.area_um2
+    )
+    return UnitCosts(sum(energy.values()) * 1e-6, area, energy)
+
+
+def table4(seq_len: int = 384, width: int = 32) -> Dict[str, Dict[str, float]]:
+    """Reproduce Table IV: softermax/baseline ratios at seq_len (SQuAD=384)."""
+    rows = V = seq_len
+    b_u = baseline_unnormed_unit(rows, V, width)
+    s_u = softermax_unnormed_unit(rows, V, width)
+    b_n = baseline_norm_unit(rows, V, width)
+    s_n = softermax_norm_unit(rows, V, width)
+    b_pe = pe_costs(seq_len, "baseline", PEConfig(vector_size=width, n_lanes=width))
+    s_pe = pe_costs(seq_len, "softermax", PEConfig(vector_size=width, n_lanes=width))
+    return {
+        "unnormed_softmax_unit": {
+            "area_ratio": s_u.area_um2 / b_u.area_um2,
+            "energy_ratio": s_u.energy_uj / b_u.energy_uj,
+            "paper_area": 0.25,
+            "paper_energy": 0.10,
+        },
+        "normalization_unit": {
+            "area_ratio": s_n.area_um2 / b_n.area_um2,
+            "energy_ratio": s_n.energy_uj / b_n.energy_uj,
+            "paper_area": 0.65,
+            "paper_energy": 0.39,
+        },
+        "full_pe": {
+            "area_ratio": s_pe.area_um2 / b_pe.area_um2,
+            "energy_ratio": s_pe.energy_uj / b_pe.energy_uj,
+            "paper_area": 0.90,
+            "paper_energy": 0.43,
+        },
+    }
+
+
+def fig5_sweep(widths=(16, 32), seq_lens=(128, 256, 384, 512, 1024, 2048, 4096)):
+    """Fig. 5: PE energy vs sequence length for 16- and 32-wide configs."""
+    out = []
+    for w in widths:
+        cfg = PEConfig(vector_size=w, n_lanes=w,
+                       input_buffer_kb=16 if w == 16 else 32,
+                       weight_buffer_kb=32 if w == 16 else 128,
+                       accum_collector_kb=6 if w == 16 else 12)
+        for L in seq_lens:
+            b = pe_costs(L, "baseline", cfg)
+            s = pe_costs(L, "softermax", cfg)
+            out.append({
+                "width": w,
+                "seq_len": L,
+                "baseline_uj": b.energy_uj,
+                "softermax_uj": s.energy_uj,
+                "ratio": s.energy_uj / b.energy_uj,
+            })
+    return out

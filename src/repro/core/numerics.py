@@ -1,0 +1,41 @@
+"""Numeric helpers shared by the softermax implementations.
+
+Base-2 exponentials are the paper's central numeric substitution: TPU/ASIC
+hardware computes ``e^x`` as ``2^(x*log2(e))`` anyway, so moving the network
+itself to base 2 deletes the per-element conversion multiply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# exact in double precision; cast at use sites.
+LOG2_E = float(np.log2(np.e))
+LN_2 = float(np.log(2.0))
+
+# A very negative (but finite, representable in bf16) score used for masking.
+# -inf is avoided inside online recurrences: (-inf) - (-inf) = nan.
+NEG_INF = -1e9
+
+
+def exp2(x: jax.Array) -> jax.Array:
+    """2**x elementwise (jnp.exp2; lowers to the VPU exp2 on TPU)."""
+    return jnp.exp2(x)
+
+
+def pow2_int(k: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """2**k for *integer* k — the Softermax renormalization factor.
+
+    Because k is an integer, this is an exact power of two: the hardware
+    realization is a shifter and the float realization is an exponent add.
+    ``exp2`` of an exactly-integer float is exact in IEEE arithmetic, which is
+    why the integer-max co-design makes the online renormalization lossless.
+    """
+    return jnp.exp2(k.astype(dtype))
+
+
+def int_ceil(x: jax.Array) -> jax.Array:
+    """Ceiling used by the IntMax unit (kept in floating point carrying an
+    exactly-integral value)."""
+    return jnp.ceil(x)

@@ -1,0 +1,207 @@
+"""Fixed-point arithmetic, LPW function units, and QAT utilities (§III.B).
+
+Implements the paper's Table-I Q-formats bit-faithfully at the interfaces:
+
+    Inp Q(6,2) | LocalMax Q(6,2) | Unnormed Q(1,15) | PowSum Q(10,6)
+    | Recip Q(1,7) | Outp Q(1,7)
+
+Notation: Q(i, f) has ``i`` integer bits (including sign when signed) and
+``f`` fractional bits. Values are simulated in floating point but snapped to
+the exact representable grid (round-to-nearest, saturating), which is
+bit-equivalent for these narrow formats.
+
+The linear-piecewise (LPW) units mirror the paper's hardware:
+
+* ``lpw_exp2``      — 4-segment LPW of 2^frac on [0,1), shifted by the integer
+                      part. With Q(6,2) inputs frac(x·4) is always 0, so the
+                      slope LUT is unused and the unit degenerates to a
+                      4-entry c-LUT — exactly the observation in §IV.A.
+* ``lpw_reciprocal``— normalize to [1,2) by a leading-one shift, 4-segment LPW
+                      of 1/m, shift back.
+
+Everything is differentiable through clipped straight-through estimators so
+softermax-aware finetuning (§III, "Softermax-aware finetuning") works out of
+the box.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Q-format fixed point with clipped STE.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Q(int_bits, frac_bits) fixed-point format."""
+
+    int_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2.0 ** self.frac_bits)
+
+    @property
+    def max_value(self) -> float:
+        if self.signed:
+            return float(2.0 ** (self.int_bits - 1) - 1.0 / self.scale)
+        return float(2.0 ** self.int_bits - 1.0 / self.scale)
+
+    @property
+    def min_value(self) -> float:
+        return float(-(2.0 ** (self.int_bits - 1))) if self.signed else 0.0
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """Round-to-nearest saturating quantization with clipped-STE gradient."""
+        xc = jnp.clip(x, self.min_value, self.max_value)
+        q = jnp.round(xc * self.scale) / self.scale
+        # Straight-through: forward = q, gradient = d(clip)/dx (0 when saturated).
+        return xc + jax.lax.stop_gradient(q - xc)
+
+    def quantize_exact(self, x: jax.Array) -> jax.Array:
+        """Quantization without STE (for non-differentiable reference paths)."""
+        xc = jnp.clip(x, self.min_value, self.max_value)
+        return jnp.round(xc * self.scale) / self.scale
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftermaxBitwidths:
+    """Paper Table I."""
+
+    inp: QFormat = QFormat(6, 2, signed=True)
+    localmax: QFormat = QFormat(6, 2, signed=True)
+    unnormed: QFormat = QFormat(1, 15, signed=False)
+    powsum: QFormat = QFormat(10, 6, signed=False)
+    recip: QFormat = QFormat(1, 7, signed=False)
+    outp: QFormat = QFormat(1, 7, signed=False)
+
+
+DEFAULT_BITWIDTHS = SoftermaxBitwidths()
+
+# ---------------------------------------------------------------------------
+# LPW power-of-two unit (§IV.A, "Power of Two Unit").
+# ---------------------------------------------------------------------------
+
+_N_SEGMENTS = 4
+# Endpoint-interpolation LUTs for 2^t on [0,1): c[k] = 2^(k/4), m[k] = slope.
+_EXP2_C = np.array([2.0 ** (k / _N_SEGMENTS) for k in range(_N_SEGMENTS)])
+_EXP2_M = np.array(
+    [2.0 ** ((k + 1) / _N_SEGMENTS) - 2.0 ** (k / _N_SEGMENTS) for k in range(_N_SEGMENTS)]
+)
+# LUT entries are themselves stored in Q(1,15) in hardware.
+_LUT_FMT = QFormat(1, 15, signed=False)
+_EXP2_C_Q = np.round(_EXP2_C * _LUT_FMT.scale) / _LUT_FMT.scale
+_EXP2_M_Q = np.round(_EXP2_M * _LUT_FMT.scale) / _LUT_FMT.scale
+
+
+def _lut_select(seg: jax.Array, table, dtype) -> jax.Array:
+    """4-entry LUT realized as a where-chain (TPU/Pallas-friendly: no gather)."""
+    out = jnp.full(seg.shape, float(table[0]), dtype)
+    for k in range(1, len(table)):
+        out = jnp.where(seg == k, jnp.asarray(float(table[k]), dtype), out)
+    return out
+
+
+def lpw_exp2(t: jax.Array, out_fmt: QFormat = DEFAULT_BITWIDTHS.unnormed) -> jax.Array:
+    """4-segment LPW approximation of 2^t for t <= 0, quantized to ``out_fmt``.
+
+    Decomposes t = ip + fr with fr ∈ [0,1); computes the LPW of 2^fr; shifts
+    right by -ip (a multiplication by an exact power of two).
+    """
+    t = jnp.asarray(t)
+    ip = jnp.floor(t)
+    fr = t - ip  # in [0, 1)
+    x_scaled = fr * _N_SEGMENTS
+    seg = jnp.clip(x_scaled.astype(jnp.int32), 0, _N_SEGMENTS - 1)
+    u = x_scaled - seg.astype(t.dtype)  # frac(x_scaled); 0 for Q(6,2) inputs
+    c = _lut_select(seg, _EXP2_C_Q, t.dtype)
+    m = _lut_select(seg, _EXP2_M_Q, t.dtype)
+    lpw = m * u + c
+    # Shift by the integer part. ip <= 0; clamp the shift so 2^ip never
+    # underflows to a denormal blowup in the simulation.
+    ip = jnp.maximum(ip, -40.0)
+    val = lpw * jnp.exp2(ip)
+    return out_fmt.quantize(val)
+
+
+# ---------------------------------------------------------------------------
+# LPW reciprocal unit (§IV.B, "Normalization Unit").
+# ---------------------------------------------------------------------------
+
+_RECIP_C = np.array([1.0 / (1.0 + k / _N_SEGMENTS) for k in range(_N_SEGMENTS)])
+_RECIP_M = np.array(
+    [
+        1.0 / (1.0 + (k + 1) / _N_SEGMENTS) - 1.0 / (1.0 + k / _N_SEGMENTS)
+        for k in range(_N_SEGMENTS)
+    ]
+)
+
+
+def lpw_reciprocal(d: jax.Array, out_fmt: QFormat = DEFAULT_BITWIDTHS.recip) -> jax.Array:
+    """LPW 1/d for d > 0: normalize to [1,2) via leading-one shift, LPW, shift.
+
+    The *mantissa* reciprocal is quantized to ``out_fmt`` (the Q(1,7) `Recip.`
+    interface of Table I); the power-of-two un-shift is exact, mirroring the
+    hardware where the shift happens after the narrow LPW unit.
+    """
+    d = jnp.asarray(d)
+    safe = jnp.maximum(d, 2.0 ** -20)
+    e = jnp.floor(jnp.log2(safe))  # leading-one position
+    mant = safe * jnp.exp2(-e)  # in [1, 2)
+    x_scaled = (mant - 1.0) * _N_SEGMENTS
+    seg = jnp.clip(x_scaled.astype(jnp.int32), 0, _N_SEGMENTS - 1)
+    u = x_scaled - seg.astype(d.dtype)
+    c = _lut_select(seg, _RECIP_C, d.dtype)
+    m = _lut_select(seg, _RECIP_M, d.dtype)
+    recip_mant = out_fmt.quantize(m * u + c)  # in (0.5, 1]
+    val = recip_mant * jnp.exp2(-e)
+    return jnp.where(d > 0, val, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Int8 QAT with percentile calibration (§V, "99.999% percentile calibrator").
+# ---------------------------------------------------------------------------
+
+
+def percentile_scale(x: jax.Array, percentile: float = 99.999) -> jax.Array:
+    """Symmetric int8 scale from the |x| percentile (paper's calibrator)."""
+    amax = jnp.percentile(jnp.abs(x).reshape(-1), percentile)
+    return jnp.maximum(amax, 1e-8) / 127.0
+
+
+def fake_quant_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 fake-quant with clipped STE (weights & activations)."""
+    xc = jnp.clip(x, -127.0 * scale, 127.0 * scale)
+    q = jnp.round(xc / scale) * scale
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+class Int8Calibrator:
+    """Running percentile calibrator: call ``observe`` during calibration
+    batches, then ``scale`` is fixed for QAT/finetuning."""
+
+    def __init__(self, percentile: float = 99.999):
+        self.percentile = percentile
+        self._amaxes: list[float] = []
+
+    def observe(self, x: jax.Array) -> None:
+        amax = float(jnp.percentile(jnp.abs(x).reshape(-1), self.percentile))
+        self._amaxes.append(amax)
+
+    @property
+    def scale(self) -> float:
+        if not self._amaxes:
+            raise ValueError("calibrator has no observations")
+        return max(float(np.median(self._amaxes)), 1e-8) / 127.0

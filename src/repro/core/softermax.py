@@ -1,0 +1,267 @@
+"""Softermax algorithm variants (pure jnp reference semantics).
+
+This module is the paper's Figure-3 progression, implemented as composable JAX
+functions:
+
+  1. ``softmax_e``        — standard numerically-stable softmax (2 passes, base e)
+  2. ``softmax_base2``    — base replacement: 2^x instead of e^x         (§III.A)
+  3. ``*_online``         — online normalizer: fused max+denominator pass (§III.C)
+  4. ``softermax``        — base-2 + *integer* max + online normalization,
+                            the full hardware-friendly algorithm         (§III.C)
+  5. ``softermax_fixed``  — bit-faithful fixed-point evaluation with the paper's
+                            Table-I Q-formats and LPW units              (§III.B)
+
+All functions operate over the last axis. Masked positions should carry
+``numerics.NEG_INF`` (finite) rather than -inf so online recurrences stay
+nan-free; fully-masked rows produce all-zero outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.numerics import LOG2_E, NEG_INF, exp2, int_ceil, pow2_int
+
+# ---------------------------------------------------------------------------
+# 1. Baseline: standard numerically-stable softmax (two explicit passes).
+# ---------------------------------------------------------------------------
+
+
+def softmax_e(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Standard max-subtracted softmax, base e. The paper's baseline."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    ex = jnp.exp(x - m)
+    d = jnp.sum(ex, axis=axis, keepdims=True)
+    return _safe_div(ex, d)
+
+
+# ---------------------------------------------------------------------------
+# 2. Base replacement (§III.A).
+# ---------------------------------------------------------------------------
+
+
+def softmax_base2(x: jax.Array, axis: int = -1, fold_log2e: bool = False) -> jax.Array:
+    """Base-2 softmax: 2^(x-m) / sum 2^(x-m).
+
+    With ``fold_log2e=True`` the input is pre-scaled by log2(e), making the
+    result *identical* to ``softmax_e`` (up to rounding); this is the drop-in
+    mode used when no softermax-aware finetuning is available. The scale is a
+    single multiply that callers fold into the attention 1/sqrt(d) factor, so
+    it is free at the tensor level.
+    """
+    if fold_log2e:
+        x = x * jnp.asarray(LOG2_E, dtype=x.dtype)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    ex = exp2(x - m)
+    d = jnp.sum(ex, axis=axis, keepdims=True)
+    return _safe_div(ex, d)
+
+
+# ---------------------------------------------------------------------------
+# 3. Online normalization (§III.C) — reference scan implementations.
+#    These define the semantics the Pallas kernels must reproduce.
+# ---------------------------------------------------------------------------
+
+
+def softmax_online(x: jax.Array, base2: bool = False) -> jax.Array:
+    """Milakov-Gimelshein online softmax over the last axis via lax.scan.
+
+    Single conceptual pass: running max ``m`` and running denominator ``d``;
+    on a new max the old denominator is rescaled by base**(m_old - m_new).
+    """
+    b = 2.0 if base2 else jnp.e
+    _exp = exp2 if base2 else jnp.exp
+
+    x2 = x.reshape((-1, x.shape[-1]))
+
+    def step(carry, xv):
+        m, d = carry
+        m_new = jnp.maximum(m, xv)
+        d = d * _exp_base(m - m_new, base2) + _exp_base(xv - m_new, base2)
+        return (m_new, d), None
+
+    init = (jnp.full(x2.shape[:1], NEG_INF, x2.dtype), jnp.zeros(x2.shape[:1], x2.dtype))
+    (m, d), _ = jax.lax.scan(step, init, jnp.moveaxis(x2, -1, 0))
+    y = _exp(x2 - m[:, None])
+    y = _safe_div(y, d[:, None])
+    del b
+    return y.reshape(x.shape)
+
+
+def softermax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """The full Softermax: base-2, integer max, online normalization.
+
+    Closed form (exact-arithmetic equivalent of the online recurrence):
+    ``m = max_i ceil(x_i)``; ``y_i = 2^(x_i - m) / sum_j 2^(x_j - m)``.
+    Using the *integer* ceiling of the max only changes the shared scaling of
+    numerator and denominator, so in exact arithmetic softermax(x) ==
+    softmax_base2(x); the co-design payoff is that every renormalization
+    factor 2^(m_old - m_new) has an integer exponent ⇒ a shift in hardware,
+    an exact exponent-add on TPU.
+    """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+    m = jnp.max(int_ceil(x), axis=-1, keepdims=True)
+    # Fully-masked rows: keep the exponent finite.
+    m = jnp.maximum(m, NEG_INF)
+    ex = exp2(x - m)
+    d = jnp.sum(ex, axis=-1, keepdims=True)
+    y = _safe_div(ex, d)
+    if axis != -1:
+        y = jnp.moveaxis(y, -1, axis)
+    return y
+
+
+def softermax_online_scan(x: jax.Array, block: int = 128) -> jax.Array:
+    """Block-online softermax over the last axis (reference for the kernels).
+
+    Processes ``block``-wide slices the way the Unnormed Softmax Unit does:
+    per-slice IntMax + local power-of-two sums, then a running-sum
+    renormalization by an exact power of two (the "shift"), then a final
+    normalization pass (the Normalization Unit).
+    """
+    *lead, V = x.shape
+    pad = (-V) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)], constant_values=NEG_INF)
+    Vp = x.shape[-1]
+    xb = x.reshape((-1, Vp // block, block))
+
+    def step(carry, xv):  # xv: (rows, block)
+        m, d = carry
+        local_m = jnp.max(int_ceil(xv), axis=-1)  # IntMax over the slice
+        m_new = jnp.maximum(m, local_m)
+        local_d = jnp.sum(exp2(xv - m_new[:, None]), axis=-1)
+        d = d * pow2_int(m - m_new, xv.dtype) + local_d  # shift + add
+        return (m_new, d), None
+
+    rows = xb.shape[0]
+    init = (jnp.full((rows,), NEG_INF, x.dtype), jnp.zeros((rows,), x.dtype))
+    (m, d), _ = jax.lax.scan(step, init, jnp.moveaxis(xb, 1, 0))
+    y = exp2(xb.reshape(rows, Vp) - m[:, None])
+    y = _safe_div(y, d[:, None])
+    y = y.reshape(*lead, Vp)
+    if pad:
+        y = y[..., :V]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# 4. Fixed-point softermax (§III.B, Table I bitwidths).
+# ---------------------------------------------------------------------------
+
+
+def softermax_fixed(
+    x: jax.Array,
+    bitwidths: Optional[quant.SoftermaxBitwidths] = None,
+    block: int = 16,
+) -> jax.Array:
+    """Bit-faithful fixed-point Softermax with the paper's Table-I formats.
+
+    Pipeline per row, processed ``block`` elements at a time (the hardware
+    VectorSize): quantize input to Q(6,2) → IntMax → LPW power-of-two to
+    Q(1,15) → accumulate PowSum in Q(10,6) with shift renormalization →
+    LPW reciprocal Q(1,7) → output multiply quantized to Q(1,7).
+
+    Differentiable via straight-through estimators (quant.ste_round), so it
+    can be used directly in softermax-aware finetuning.
+    """
+    bw = bitwidths or quant.DEFAULT_BITWIDTHS
+    *lead, V = x.shape
+    xq = bw.inp.quantize(x)  # Q(6,2) input
+    pad = (-V) % block
+    if pad:
+        xq = jnp.pad(xq, [(0, 0)] * len(lead) + [(0, pad)], constant_values=bw.inp.min_value)
+    Vp = xq.shape[-1]
+    xb = xq.reshape((-1, Vp // block, block))
+    rows = xb.shape[0]
+
+    def step(carry, xv):  # xv: (rows, block)
+        m, d = carry
+        local_m = jnp.max(jnp.ceil(xv), axis=-1)  # IntMax (Q(6,2) ceil is exact)
+        m_new = jnp.maximum(m, local_m)
+        # LPW 2^(x - m): exponent in (-inf, 0]; unnormed values Q(1,15)
+        un = quant.lpw_exp2(xv - m_new[:, None], out_fmt=bw.unnormed)
+        local_d = jnp.sum(un, axis=-1)
+        d = bw.powsum.quantize(d * pow2_int(m - m_new, xv.dtype) + local_d)
+        return (m_new, d), un
+
+    init = (
+        jnp.full((rows,), float(quant.DEFAULT_BITWIDTHS.inp.min_value), xb.dtype),
+        jnp.zeros((rows,), xb.dtype),
+    )
+    (m, d), un = jax.lax.scan(step, init, jnp.moveaxis(xb, 1, 0))
+    un = jnp.moveaxis(un, 0, 1).reshape(rows, Vp)  # unnormed numerators (per-block max ref)
+    # Normalization Unit: renormalize numerators to the global max (shift),
+    # then multiply by the LPW reciprocal of the denominator.
+    # NOTE un was computed against the *running* max at its block; recompute the
+    # shift per block: numerator_i * 2^(m_block_i - m_final). We recover the
+    # running max per block from the scan by recomputing it (cheap, exact).
+    run_m = _running_block_intmax(xb, init_m=init[0])  # (rows, nblocks)
+    shift = pow2_int(run_m - m[:, None], xb.dtype)  # ≤ 1, integer exponent
+    un = un.reshape(rows, Vp // block, block) * shift[..., None]
+    un = un.reshape(rows, Vp)
+    recip = quant.lpw_reciprocal(d, out_fmt=bw.recip)  # Q(1,7) reciprocal
+    y = bw.outp.quantize(un * recip[:, None])
+    y = jnp.where(d[:, None] > 0, y, jnp.zeros_like(y))
+    y = y.reshape(*lead, Vp)
+    if pad:
+        y = y[..., :V]
+    return y
+
+
+def _running_block_intmax(xb: jax.Array, init_m: jax.Array) -> jax.Array:
+    """Running IntMax *after* each block, matching the scan in softermax_fixed."""
+
+    def step(m, xv):
+        m_new = jnp.maximum(m, jnp.max(jnp.ceil(xv), axis=-1))
+        return m_new, m_new
+
+    _, ms = jax.lax.scan(step, init_m, jnp.moveaxis(xb, 1, 0))
+    return jnp.moveaxis(ms, 0, 1)  # (rows, nblocks)
+
+
+# ---------------------------------------------------------------------------
+# Attention-facing entry point.
+# ---------------------------------------------------------------------------
+
+
+def attention_softmax(
+    scores: jax.Array,
+    impl: str = "softermax",
+    axis: int = -1,
+) -> jax.Array:
+    """Dispatch table used by every model in the zoo.
+
+    impl ∈ {"softmax" (e-base baseline), "base2", "base2_folded",
+            "softermax" (paper), "softermax_fixed" (bit-faithful QAT)}.
+    """
+    if impl == "softmax":
+        return softmax_e(scores, axis=axis)
+    if impl == "base2":
+        return softmax_base2(scores, axis=axis)
+    if impl == "base2_folded":
+        return softmax_base2(scores, axis=axis, fold_log2e=True)
+    if impl == "softermax":
+        return softermax(scores, axis=axis)
+    if impl == "softermax_fixed":
+        if axis not in (-1, scores.ndim - 1):
+            scores = jnp.moveaxis(scores, axis, -1)
+            out = softermax_fixed(scores.reshape(-1, scores.shape[-1])).reshape(scores.shape)
+            return jnp.moveaxis(out, -1, axis)
+        shape = scores.shape
+        return softermax_fixed(scores.reshape(-1, shape[-1])).reshape(shape)
+    raise ValueError(f"unknown softmax impl: {impl!r}")
+
+
+def _exp_base(x: jax.Array, base2: bool) -> jax.Array:
+    return exp2(x) if base2 else jnp.exp(x)
+
+
+def _safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
+    """num/den with fully-masked rows (den == 0) mapped to 0, not nan."""
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataState, SyntheticLMData
+
+__all__ = ["DataState", "SyntheticLMData"]

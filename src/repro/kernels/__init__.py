@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+softermax/        row-wise Softermax, two-phase (Unnormed + Normalization unit)
+softermax_quant/  bit-faithful fixed-point Softermax (Table-I Q-formats, LPW)
+flash_attention/  fused attention with the Softermax online recurrence
+flash_decode/     single-token decode attention over long KV caches
+"""

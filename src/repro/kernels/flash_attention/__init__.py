@@ -1,0 +1,6 @@
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_op, scale_queries
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_op", "scale_queries",
+           "attention_ref"]

@@ -1,0 +1,93 @@
+"""Public flash-attention op: scaling conventions + trainable custom_vjp.
+
+Forward runs the Pallas kernel (Softermax online recurrence) and saves the
+per-row (IntMax m, denominator d) statistics; backward runs the Pallas flash
+backward kernels (``flash_backward.py``) which recompute P blockwise from
+those statistics — memory-linear training. A reference-VJP backward is kept
+selectable for cross-checking (``bwd_impl="ref"``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import LOG2_E
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_backward import flash_attention_bwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def scale_queries(q: jax.Array, d_head: int, base2: bool) -> jax.Array:
+    """Fold 1/sqrt(d) — and log2(e) for the e-base ablation — into Q.
+
+    This is the software half of base replacement: the conversion multiply
+    happens once on a [*, d_head] tensor, never on the [*, S, S] scores.
+    """
+    scale = d_head ** -0.5
+    if not base2:
+        scale = scale * LOG2_E
+    return q * jnp.asarray(scale, q.dtype)
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7),
+)
+def flash_attention_op(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    intmax: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    return flash_attention(
+        q, k, v,
+        causal=causal, intmax=intmax,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, causal, intmax, block_q, block_k, interpret):
+    out, m, d = flash_attention(
+        q, k, v, causal=causal, intmax=intmax,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        return_stats=True)
+    return out, (q, k, v, out, m, d)
+
+
+def _bwd(causal, intmax, block_q, block_k, interpret, res, g):
+    q, k, v, o, m, d = res
+    return flash_attention_bwd(
+        q, k, v, o, g, m, d, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+flash_attention_op.defvjp(_fwd, _bwd)
+
+
+def flash_attention_op_refbwd(q, k, v, *, causal=True, intmax=True,
+                              interpret=False):
+    """Cross-check variant: kernel forward, reference-autodiff backward."""
+
+    @jax.custom_vjp
+    def op(q, k, v):
+        return flash_attention(q, k, v, causal=causal, intmax=intmax,
+                               interpret=interpret)
+
+    def fwd(q, k, v):
+        return op(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                             intmax=intmax), q, k, v)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op(q, k, v)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention: full-matrix attention with the same
+softmax variant. Queries sit at the end of the kv axis (decode convention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import NEG_INF
+from repro.core.softermax import softermax, softmax_base2
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D) — pre-scaled
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    intmax: bool = True,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kj = jnp.arange(Sk)[None, :]
+        s = jnp.where(qi >= kj, s, NEG_INF)
+    p = softermax(s, axis=-1) if intmax else softmax_base2(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)

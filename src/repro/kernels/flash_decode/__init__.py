@@ -1,0 +1,5 @@
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ops import flash_decode_op
+from repro.kernels.flash_decode.ref import decode_ref
+
+__all__ = ["flash_decode", "flash_decode_op", "decode_ref"]

@@ -1,0 +1,16 @@
+"""Jitted public wrapper for decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+def flash_decode_op(q, k, v, lengths, *, intmax: bool = True,
+                    block_k: int = 256, interpret: bool = False) -> jax.Array:
+    return flash_decode(q, k, v, lengths, intmax=intmax, block_k=block_k,
+                        interpret=interpret)
+
+
+__all__ = ["flash_decode_op", "decode_ref"]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import NEG_INF
+from repro.core.softermax import softermax, softmax_base2
+
+
+def decode_ref(
+    q: jax.Array,        # (B, Hq, D) pre-scaled
+    k: jax.Array,        # (B, Hkv, S, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,)
+    *,
+    intmax: bool = True,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = softermax(s, axis=-1) if intmax else softmax_base2(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.softermax.ops import softermax_op
+from repro.kernels.softermax.ref import softermax_rows_ref
+
+__all__ = ["softermax_op", "softermax_rows_ref"]

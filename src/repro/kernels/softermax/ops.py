@@ -1,0 +1,28 @@
+"""Jitted public wrapper for the softermax row kernel: arbitrary leading dims."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.softermax.softermax import softermax_rows
+
+
+def softermax_op(
+    x: jax.Array,
+    *,
+    intmax: bool = True,
+    block_rows: int = 8,
+    block_v: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Softermax over the last axis of an arbitrarily-shaped array."""
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    out = softermax_rows(
+        x2,
+        intmax=intmax,
+        block_rows=block_rows,
+        block_v=block_v,
+        interpret=interpret,
+    )
+    return out.reshape(shape)

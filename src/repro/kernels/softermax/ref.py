@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the softermax row kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.softermax import softermax, softmax_base2
+
+
+def softermax_rows_ref(x: jax.Array, intmax: bool = True) -> jax.Array:
+    """Closed-form reference: base-2 softmax with (optionally integer) max."""
+    if intmax:
+        return softermax(x, axis=-1)
+    return softmax_base2(x, axis=-1)

@@ -1,0 +1,5 @@
+from repro.kernels.softermax_quant.ops import softermax_quant_op
+from repro.kernels.softermax_quant.ref import softermax_quant_ref
+from repro.kernels.softermax_quant.softermax_quant import softermax_quant_rows
+
+__all__ = ["softermax_quant_op", "softermax_quant_ref", "softermax_quant_rows"]

@@ -1,0 +1,16 @@
+"""Public wrapper for the fixed-point softermax kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.softermax_quant.softermax_quant import softermax_quant_rows
+
+
+def softermax_quant_op(x: jax.Array, *, vector_size: int = 16,
+                       block_rows: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    out = softermax_quant_rows(x2, vector_size=vector_size,
+                               block_rows=block_rows, interpret=interpret)
+    return out.reshape(shape)

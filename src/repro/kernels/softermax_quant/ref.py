@@ -1,0 +1,17 @@
+"""Oracle for the fixed-point kernel: core's block-online fixed-point softermax.
+
+Note on rounding points: the jnp reference quantizes unnormed numerators at
+the *running* max and then rescales by an exact power of two in float; the
+kernel (like the silicon) holds the post-shift value in Q(1,15). The two can
+differ by 1 ulp of Q(1,15) at ties, which after the Q(1,7) output
+quantization is at most 1 output ulp (2^-7) — the test tolerance.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.softermax import softermax_fixed
+
+
+def softermax_quant_ref(x: jax.Array, vector_size: int = 16) -> jax.Array:
+    return softermax_fixed(x, block=vector_size)

@@ -1,0 +1,90 @@
+"""Pallas kernel: bit-faithful fixed-point Softermax (§III.B + Table I).
+
+Simulates the exact hardware pipeline per row, VectorSize elements at a time:
+
+    Q(6,2) input → IntMax → LPW power-of-two → Q(1,15) unnormed numerators
+    → Q(10,6) running PowSum with shift renormalization
+    → LPW reciprocal Q(1,7) → Q(1,7) output
+
+One grid step owns a ``(block_rows, V)`` tile in VMEM and iterates the
+hardware's VectorSize-wide slices with ``lax.fori_loop`` — the loop carries
+(running IntMax, running PowSum) exactly like the Reduction unit's buffers.
+All arithmetic is float-simulated fixed point: every value is snapped to its
+Q-format grid at the same interface the silicon would quantize it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import quant
+
+
+def _quant_kernel(x_ref, o_ref, *, vector_size: int,
+                  bw: quant.SoftermaxBitwidths):
+    x = x_ref[...].astype(jnp.float32)
+    rows, V = x.shape
+    n_slices = V // vector_size
+
+    xq = bw.inp.quantize_exact(x)  # Q(6,2) scores
+
+    def slice_step(s, carry):
+        m, d = carry
+        xv = jax.lax.dynamic_slice(xq, (0, s * vector_size),
+                                   (rows, vector_size))
+        # IntMax unit: ceil per element, then slice max and running max.
+        local_m = jnp.max(jnp.ceil(xv), axis=1)
+        m_new = jnp.maximum(m, local_m)
+        # Power-of-two unit (LPW) → Q(1,15); Reduction unit accumulate.
+        un = quant.lpw_exp2(xv - m_new[:, None], out_fmt=bw.unnormed)
+        local_d = jnp.sum(un, axis=1)
+        # Shift-renormalize the running PowSum (integer exponent ⇒ exact).
+        d = bw.powsum.quantize_exact(d * jnp.exp2(m - m_new) + local_d)
+        return (m_new, d)
+
+    init = (jnp.full((rows,), float(bw.inp.min_value), jnp.float32),
+            jnp.zeros((rows,), jnp.float32))
+    m_fin, d_fin = jax.lax.fori_loop(0, n_slices, slice_step, init)
+
+    # Normalization unit: recompute unnormed numerators against the final max
+    # (equivalent to the stored-numerator + shift path: 2^(x-m_run) *
+    # 2^(m_run-m_fin) == 2^(x-m_fin) exactly, since all shifts are integer),
+    # then multiply by the LPW reciprocal of the PowSum.
+    un_fin = quant.lpw_exp2(xq - m_fin[:, None], out_fmt=bw.unnormed)
+    recip = quant.lpw_reciprocal(d_fin, out_fmt=bw.recip)
+    y = bw.outp.quantize_exact(un_fin * recip[:, None])
+    y = jnp.where(d_fin[:, None] > 0, y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vector_size", "block_rows", "interpret"),
+)
+def softermax_quant_rows(
+    x: jax.Array,
+    *,
+    vector_size: int = 16,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fixed-point Softermax over the last axis of ``(rows, V)``."""
+    rows, V = x.shape
+    pr = (-rows) % block_rows
+    pv = (-V) % vector_size
+    bw = quant.DEFAULT_BITWIDTHS
+    xp = jnp.pad(x, ((0, pr), (0, pv)), constant_values=bw.inp.min_value)
+    R, Vp = xp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, vector_size=vector_size, bw=bw),
+        grid=(R // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, Vp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, Vp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, Vp), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:rows, :V]

@@ -1,0 +1,128 @@
+"""First-principles FLOP counts per (arch × shape) cell.
+
+Why this exists: XLA's CPU ``cost_analysis`` has two systematic artifacts on
+our graphs — (a) FLOPs inside *nested* while loops (chunked-attention scan
+inside the layer scan) are not multiplied by the inner trip count, and
+(b) "bytes accessed" charges the full while-loop carry (the stacked KV
+cache) once per iteration, which a real TPU does not pay. The collective
+parser (launch/roofline.py) is trip-count-aware and unaffected.
+
+So the roofline's *compute* term uses these analytic FLOPs (exact for the
+model definitions in this repo — formulas below mirror models/*.py
+structurally), while HLO flops/bytes are retained in the artifacts as a
+cross-check. See EXPERIMENTS.md §Roofline "methodology".
+
+Conventions: 1 MAC = 2 FLOPs; backward = 2× forward (train = 3× fwd);
+causal attention halves the score/AV work; remat recompute is NOT counted
+(roofline counts useful work).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, B: int, Sq: int, Sk: int,
+                          causal: bool) -> float:
+    """Score (QK^T) + weighted sum (AV) FLOPs for one layer, forward."""
+    if cfg.family == "rwkv":
+        return 0.0
+    if cfg.mla is not None:
+        a = cfg.mla
+        if cfg.opt_mla_absorbed and Sq > 1:
+            # latent-space attention: scores over kv_lora+rope, AV over
+            # kv_lora (cheaper wire/memory, more score FLOPs)
+            dqk, dv = a.kv_lora + a.qk_rope, a.kv_lora
+        else:
+            dqk, dv = a.qk_nope + a.qk_rope, a.v_head
+        pairs = B * cfg.n_heads * Sq * Sk * (0.5 if causal and Sq == Sk else 1)
+        return 2 * pairs * (dqk + dv)
+    H, dh = cfg.n_heads, cfg.head_dim_
+    eff_k = min(Sk, cfg.window) if cfg.window else Sk
+    if causal and Sq == Sk:
+        pairs = B * H * Sq * eff_k * (0.5 if not cfg.window else 1.0)
+        if cfg.window and Sq > cfg.window:
+            pairs = B * H * Sq * cfg.window  # banded
+        elif cfg.window:
+            pairs = B * H * Sq * eff_k * 0.5
+    else:
+        pairs = B * H * Sq * eff_k
+    return 2 * pairs * 2 * dh
+
+
+def _recurrence_flops_per_layer(cfg: ModelConfig, B: int, S: int) -> float:
+    """State-update FLOPs (RWKV wkv / Mamba SSM scan), forward."""
+    if cfg.family == "rwkv":
+        n = cfg.ssm.head_size
+        H = cfg.d_model // n
+        return 5.0 * B * S * H * n * n
+    if cfg.family == "hybrid":
+        di = cfg.ssm.d_inner or 2 * cfg.d_model
+        return 6.0 * B * S * di * cfg.ssm.state
+    return 0.0
+
+
+def matmul_param_count(cfg: ModelConfig) -> int:
+    """Parameters that multiply every token (active experts for MoE;
+    embedding lookup excluded; logits matmul included once)."""
+    from repro.models.registry import model_fns
+    from repro.models.schema import ParamSpec
+    import jax
+    import numpy as np
+
+    fns = model_fns(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        fns.schema, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    total = 0
+    for path, ps in leaves:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        name = "/".join(keys)
+        if len(ps.shape) < 2:
+            continue
+        if "embedding" in name or "dec_pos" in name:
+            continue
+        total += int(np.prod(ps.shape))
+    # logits projection: tied embeddings reuse the table as a matmul
+    if cfg.tie_embeddings:
+        total += cfg.padded_vocab * cfg.d_model
+    if cfg.moe.n_experts:
+        m = cfg.moe
+        L = cfg.n_layers - m.first_dense
+        per_expert = 3 * cfg.d_model * m.d_expert
+        total -= L * m.n_experts * per_expert
+        total += L * m.top_k * per_expert
+    return total
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Total useful FLOPs (global, per step) for this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    n_mm = matmul_param_count(cfg)
+    mult = 3.0 if shape.kind == "train" else 1.0
+
+    if shape.kind == "decode":
+        tokens = B
+        mm = 2.0 * n_mm * tokens
+        if cfg.family == "encdec":
+            attn = cfg.n_layers * (
+                _attn_flops_per_layer(cfg, B, 1, S, False) +
+                _attn_flops_per_layer(cfg, B, 1, cfg.enc_positions, False))
+        else:
+            attn = cfg.n_layers * _attn_flops_per_layer(cfg, B, 1, S, False)
+        rec = cfg.n_layers * _recurrence_flops_per_layer(cfg, B, 1)
+        return mm + attn + rec
+
+    tokens = B * S
+    mm = 2.0 * n_mm * tokens
+    if cfg.family == "encdec":
+        F = cfg.enc_positions
+        attn = (cfg.n_enc_layers * _attn_flops_per_layer(cfg, B, F, F, False)
+                + cfg.n_layers * (_attn_flops_per_layer(cfg, B, S, S, True)
+                                  + _attn_flops_per_layer(cfg, B, S, F,
+                                                          False)))
+        # encoder matmuls already inside n_mm·tokens is approximate for
+        # enc-dec (enc runs F tokens, dec S tokens); correct the ratio:
+        mm = 2.0 * n_mm * tokens  # dominated by decoder at S >> F
+    else:
+        attn = cfg.n_layers * _attn_flops_per_layer(cfg, B, S, S, cfg.causal)
+    rec = cfg.n_layers * _recurrence_flops_per_layer(cfg, B, S)
+    return (mm + attn + rec) * mult

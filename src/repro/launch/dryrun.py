@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). 512 placeholder host devices let jax.make_mesh build
+# the production meshes; nothing is allocated — every input is a
+# ShapeDtypeStruct and the deliverable is .lower().compile().
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input-shape × mesh) cell:
+
+  1. build the production mesh — (16,16)=(data,model) single-pod or
+     (2,16,16)=(pod,data,model) multi-pod;
+  2. construct abstract params / optimizer / batch / cache with their
+     NamedShardings from the logical-axis rules engine;
+  3. ``jax.jit(step).lower(...).compile()`` — sharding mismatches, OOM at
+     compile, or unsupported collectives fail here;
+  4. record memory_analysis + cost_analysis + parsed collective bytes into
+     ``artifacts/dryrun/<mesh>/<arch>__<shape>.json`` for §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--subprocess]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import (ALL_SHAPES, ModelConfig, ShapeConfig,
+                                TrainConfig)
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import (GRID_ARCHS, cell_supported, get_config,
+                                   input_specs, model_fns)
+from repro.optim import adamw
+from repro.parallel.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
+                                     SEQ_PARALLEL_RULES, logical_to_physical,
+                                     sharding_context)
+from repro.train.step import make_train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+SHAPES: Dict[str, ShapeConfig] = {s.name: s for s in ALL_SHAPES}
+
+
+def _sharding_tree(specs_tree, abstract_tree, rules, mesh):
+    """logical-axes tree + ShapeDtypeStruct tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda spec, a: NamedSharding(
+            mesh, logical_to_physical(spec, a.shape, rules, mesh)),
+        specs_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Optional[float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if not out and ma is not None:
+        out["repr"] = str(ma)[:2000]
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cfg_override=None, rules_override=None):
+    """Build + lower + compile one cell. Returns (compiled, report dict)."""
+    cfg: ModelConfig = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    # batch=1 long-context cells shard the sequence/cache over "data" instead
+    if rules_override is not None:
+        rules = rules_override
+    elif shape.global_batch < 8:
+        rules = LONG_CONTEXT_RULES
+    elif (cfg.opt_seq_parallel and shape.kind in ("train", "prefill")
+          and shape.seq_len % mesh.shape["model"] == 0
+          # recurrent time-mixers (rwkv/mamba) and the enc-dec (frames not
+          # seq-divisible) need full sequences locally — SP regresses them
+          # (measured: hymba train 0.64x); attention families only.
+          and cfg.family in ("dense", "moe")):
+        rules = SEQ_PARALLEL_RULES
+    elif cfg.opt_serve_resident and shape.kind == "decode":
+        from repro.parallel.sharding import SERVE_RULES
+        rules = SERVE_RULES
+    else:
+        rules = DEFAULT_RULES
+
+    fns = model_fns(cfg)
+    with sharding_context(mesh, rules):
+        abs_params = fns.abstract()
+        param_sh = _sharding_tree(fns.specs, abs_params, rules, mesh)
+        specs = input_specs(cfg, shape)
+
+        def batch_sharding(tree):
+            def logical_for(a):
+                if len(a.shape) >= 2:
+                    return (("batch", "seq")
+                            + (None,) * (len(a.shape) - 2))
+                return ("batch",) + (None,) * (len(a.shape) - 1)
+            return jax.tree_util.tree_map(
+                lambda a: NamedSharding(mesh, logical_to_physical(
+                    logical_for(a), a.shape, rules, mesh)), tree)
+
+        t0 = time.time()
+        if shape.kind == "train":
+            tc = TrainConfig(microbatches=1)
+            step = make_train_step(fns.loss, tc)
+            abs_opt = adamw.AdamWState(
+                m=abs_params, v=abs_params,
+                step=jax.ShapeDtypeStruct((), jnp.int32))
+            opt_sh = adamw.AdamWState(
+                m=param_sh, v=param_sh,
+                step=NamedSharding(mesh, PartitionSpec()))
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sharding(specs)),
+            ).lower(abs_params, abs_opt, specs)
+        elif shape.kind == "prefill":
+            max_len = shape.seq_len
+            lowered = jax.jit(
+                lambda p, b: fns.prefill(p, b, max_len),
+                in_shardings=(param_sh, batch_sharding(specs)),
+            ).lower(abs_params, specs)
+        else:  # decode
+            if cfg.opt_bf16_params:
+                # serving holds params pre-cast (the engine casts once);
+                # lower with bf16 matrix params so the in-step cast is an
+                # identity — not a per-token full-model copy.
+                dt16 = cfg.compute_dtype_
+                abs_params = jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(
+                        a.shape, dt16 if len(a.shape) >= 2 else a.dtype),
+                    abs_params)
+            cache_sp = fns.cache_spec(shape.global_batch, shape.seq_len)
+            cache_abs = {k: jax.ShapeDtypeStruct(sh, dt)
+                         for k, (sh, dt, _) in cache_sp.items()}
+            cache_sh = {k: NamedSharding(mesh, logical_to_physical(
+                ax, sh, rules, mesh))
+                for k, (sh, dt, ax) in cache_sp.items()}
+            tok_sh = batch_sharding(specs["tokens1"])
+            lowered = jax.jit(
+                fns.decode_step,
+                in_shardings=(param_sh, tok_sh, cache_sh),
+            ).lower(abs_params, specs["tokens1"], cache_abs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    from repro.launch.analytic import analytic_flops
+    roof = rf.from_compiled(compiled, chips, rf.model_flops(cfg, shape),
+                            analytic_flops=analytic_flops(cfg, shape))
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "cost_analysis": {k: float(v) for k, v in (
+            compiled.cost_analysis() or {}).items()
+            if isinstance(v, (int, float))},
+        "roofline": roof.to_dict(),
+    }
+    return compiled, report
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             optimized: bool = False) -> Dict:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    skip = cell_supported(arch, SHAPES[shape_name])
+    path = os.path.join(out_dir, mesh_tag)
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"{arch}__{shape_name}.json")
+    if skip:
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "skipped": skip}
+        with open(fname, "w") as f:
+            json.dump(report, f, indent=1)
+        log.info("SKIP %s %s: %s", arch, shape_name, skip)
+        return report
+    log.info("lowering %s × %s on %s%s ...", arch, shape_name, mesh_tag,
+             " [optimized]" if optimized else "")
+    cfg = get_config(arch).with_opts(True) if optimized else None
+    compiled, report = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                  cfg_override=cfg)
+    report["optimized"] = optimized
+    print(f"--- {arch} × {shape_name} × {mesh_tag} ---")
+    print("memory_analysis:", report["memory_analysis"])
+    print("cost_analysis:", {k: v for k, v in report["cost_analysis"].items()
+                             if k in ("flops", "bytes accessed")})
+    print("roofline:", {k: report["roofline"][k] for k in
+                        ("compute_s", "memory_s", "collective_s",
+                         "dominant", "roofline_fraction")})
+    with open(fname, "w") as f:
+        json.dump(report, f, indent=1)
+    del compiled
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(GRID_ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell for the chosen mesh")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each cell in a child process")
+    ap.add_argument("--optimized", action="store_true",
+                    help="enable the beyond-paper perf optimizations "
+                         "(cfg.with_opts); default is the §Roofline baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in GRID_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        if args.subprocess:
+            import subprocess
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", args.out]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            if args.optimized:
+                cmd.append("--optimized")
+            r = subprocess.run(cmd, env={**os.environ})
+            if r.returncode != 0:
+                failures.append((arch, shape))
+            continue
+        try:
+            run_cell(arch, shape, args.multi_pod, args.out,
+                     optimized=args.optimized)
+        except Exception:
+            traceback.print_exc()
+            failures.append((arch, shape))
+    if failures:
+        log.error("FAILED cells: %s", failures)
+        return 1
+    log.info("all %d cells OK", len(cells))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""Model zoo: one functional definition per family, assembled by lm.py
+(decoder-only) and whisper.py (enc-dec); registry.py dispatches by arch id."""

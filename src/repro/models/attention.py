@@ -1,0 +1,392 @@
+"""Attention with Softermax as a first-class feature.
+
+Three interchangeable implementations (``cfg.attention_impl``):
+
+* ``chunked`` — XLA-level flash: ``lax.scan`` over KV chunks carrying the
+  Softermax online state (running IntMax, running denominator, accumulator).
+  This is the paper's online normalization expressed as a compile-time
+  program transform — memory-linear in sequence length, differentiable, and
+  what the multi-pod dry-runs lower. Every float softmax variant runs through
+  ``exp2``: the e-base ablation folds log2(e) into the Q scale (base
+  replacement as software).
+* ``flash``   — the Pallas TPU kernel (kernels/flash_attention).
+* ``naive``   — full score matrix through ``core.attention_softmax``; the only
+  mode supporting ``softermax_fixed`` (bit-faithful QAT finetuning).
+
+GQA, RoPE, per-head QK-norm (qwen3) and sliding windows (hymba long-context)
+are supported in all paths. Decode attends a single token against a KV cache
+(Pallas ``flash_decode`` or a masked jnp reduction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.numerics import LOG2_E, NEG_INF
+from repro.core.softermax import attention_softmax
+from repro.kernels.flash_attention import flash_attention_op
+from repro.kernels.flash_decode import flash_decode_op
+from repro.models.layers import rmsnorm, rope
+from repro.models.schema import ParamSpec
+from repro.parallel.sharding import shard_act
+
+
+def attention_schema(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim_
+    s = {
+        "wq": ParamSpec((d, cfg.n_heads, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.n_kv_heads, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.n_kv_heads, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": ParamSpec((dh,), ("head_dim",), init="ones")}
+        s["k_norm"] = {"scale": ParamSpec((dh,), ("head_dim",), init="ones")}
+    return s
+
+
+def _ring_applicable(cfg: ModelConfig, q, k, window, x_kv) -> bool:
+    """Ring attention engages for SP self-attention: seq sharded over
+    "model", equal q/kv lengths divisible by the ring size, no window."""
+    if not cfg.opt_ring_attention or window or x_kv is not None:
+        return False
+    from repro.parallel.sharding import current_mesh, current_rules
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] < 2:
+        return False
+    if "model" not in current_rules().get("seq"):
+        return False
+    n = mesh.shape["model"]
+    return (q.shape[2] == k.shape[2] and q.shape[2] % n == 0)
+
+
+def _mode(cfg: ModelConfig) -> Tuple[float, bool]:
+    """(premultiplier, intmax) so that exp2 realizes the configured softmax."""
+    impl = cfg.softmax_impl
+    if impl == "softermax":
+        return 1.0, True
+    if impl == "base2":
+        return 1.0, False
+    if impl in ("softmax", "base2_folded"):
+        return LOG2_E, False
+    if impl == "softermax_fixed":
+        return 1.0, True
+    raise ValueError(impl)
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """Q/K/V projections + qk-norm + RoPE. x: (B, S, d)."""
+    dt = cfg.compute_dtype_
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        pos = positions[:, None, :]  # (B, 1, S) broadcast over heads
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(params, o, cfg: ModelConfig):
+    """o: (B, H, S, Dh) -> (B, S, d)."""
+    o = shard_act(o, ("batch", "act_heads", "seq", "head_dim"))
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"].astype(cfg.compute_dtype_))
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softermax attention (XLA-level flash)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Hq, Sq, D) — pre-scaled
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    intmax: bool,
+    window: int = 0,
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]  # may differ from D (MLA: qk dim 192, v dim 128)
+    group = Hq // Hkv
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    kc = jnp.moveaxis(k.reshape(B, Hkv, n_chunks, chunk, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, n_chunks, chunk, Dv), 2, 0)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, d, acc = carry
+        k_c, v_c, c_idx = inputs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_c,
+                       preferred_element_type=jnp.float32)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        valid = k_pos[None, :] < Sk
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(valid, s, NEG_INF)
+        sl = jnp.ceil(s) if intmax else s
+        m_new = jnp.maximum(m, jnp.max(sl, axis=-1, keepdims=True))
+        alpha = jnp.exp2(m - m_new)
+        p = jnp.exp2(s - m_new)
+        acc = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        d = d * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        return (m_new, d, acc), None
+
+    init = (
+        jnp.full((B, Hkv, group, Sq, 1), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hkv, group, Sq, 1), jnp.float32),
+        jnp.zeros((B, Hkv, group, Sq, Dv), jnp.float32),
+    )
+    (m, d, acc), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        init, (kc, vc, jnp.arange(n_chunks)))
+    o = jnp.where(d > 0, acc / jnp.where(d > 0, d, 1.0), 0.0)
+    return o.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+def _naive_attention(q, k, v, cfg: ModelConfig, *, causal, window, q_offset):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid = valid & (q_pos[:, None] >= k_pos[None, :])
+    if window > 0:
+        valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = attention_softmax(s, impl=cfg.softmax_impl, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def attention_apply(
+    params,
+    x: jax.Array,                # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,        # (B, S) int32
+    causal: bool = True,
+    window: int = 0,
+    x_kv: Optional[jax.Array] = None,        # cross-attention source
+    kv_positions: Optional[jax.Array] = None,
+    return_kv: bool = False,                 # also return cacheable (k, v)
+):
+    """Self (or cross) attention for train/prefill."""
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    premult, intmax = _mode(cfg)
+
+    if x_kv is None:
+        q, k, v = _project_qkv(params, x, cfg, positions)
+    else:
+        # cross-attention: q from x, k/v from x_kv
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bhsk", x_kv, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bhsk", x_kv, params["wv"].astype(dt))
+        if cfg.qk_norm:
+            q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+            k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+        if cfg.rope_theta > 0 and kv_positions is not None:
+            q = rope(q, positions[:, None, :], cfg.rope_theta)
+            k = rope(k, kv_positions[:, None, :], cfg.rope_theta)
+        causal = False
+
+    q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+    q = shard_act(q, ("batch", "act_heads", "seq", "head_dim"))
+    k = shard_act(k, ("batch", "act_heads", "seq", "head_dim"))
+    v = shard_act(v, ("batch", "act_heads", "seq", "head_dim"))
+
+    impl = cfg.attention_impl
+    if cfg.softmax_impl == "softermax_fixed":
+        impl = "naive"  # QAT mode materializes scores (finetuning only)
+    if impl == "chunked" and _ring_applicable(cfg, q, k, window, x_kv):
+        from repro.parallel.ring_attention import ring_attention
+        from repro.parallel.sharding import current_mesh
+        o = ring_attention(q, k, v, current_mesh(), causal=causal,
+                           intmax=intmax)
+    elif impl == "chunked":
+        o = chunked_attention(q, k, v, causal=causal, intmax=intmax,
+                              window=window, chunk=cfg.attention_chunk)
+    elif impl == "flash":
+        o = flash_attention_op(q, k, v, causal, intmax, 128, 128,
+                               cfg.interpret_kernels)
+    elif impl == "naive":
+        o = _naive_attention(q, k, v, cfg, causal=causal, window=window,
+                             q_offset=0)
+    else:
+        raise ValueError(impl)
+    y = _out_proj(params, o, cfg)
+    if return_kv:
+        return y, k, v
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+INT8_KV_MAX = 127.0
+
+
+def quantize_kv(t: jax.Array):
+    """Symmetric int8 per-(…,row) quantization over the last axis.
+    t: (..., D) → (int8 values, f32 scales (...,))."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / INT8_KV_MAX
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -INT8_KV_MAX, INT8_KV_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def attention_decode(
+    params,
+    x1: jax.Array,               # (B, d) current-token activations
+    cfg: ModelConfig,
+    *,
+    cache_k: jax.Array,          # (B, Hkv, S, Dh)  (int8 when opt_int8_kv)
+    cache_v: jax.Array,
+    cache_len: jax.Array,        # (B,) tokens generated so far
+    window: int = 0,
+    ring: bool = False,          # cache is a ring buffer of size = window
+    cache_k_scale: Optional[jax.Array] = None,   # (B, Hkv, S) f32
+    cache_v_scale: Optional[jax.Array] = None,
+):
+    """Returns (y1 (B, d), new_cache_k, new_cache_v[, new scales]).
+
+    ``ring=True`` stores position p at slot ``p % S_cache`` — the sliding
+    window lives in a window-sized buffer (hymba long-context decode).
+    RoPE is applied before caching, so absolute positions are preserved."""
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    premult, intmax = _mode(cfg)
+    B = x1.shape[0]
+
+    q = jnp.einsum("bd,dhk->bhk", x1, params["wq"].astype(dt))
+    k = jnp.einsum("bd,dhk->bhk", x1, params["wk"].astype(dt))
+    v = jnp.einsum("bd,dhk->bhk", x1, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        pos = cache_len[:, None]  # (B, 1): next position
+        q = rope(q[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
+        k = rope(k[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
+
+    # int8 cache: quantize the new row; attention dequantizes on read.
+    int8_kv = cache_k_scale is not None
+    if int8_kv:
+        k, k_sc = quantize_kv(k)        # (B,Hkv,Dh) int8, (B,Hkv)
+        v, v_sc = quantize_kv(v)
+
+    # Write new K/V at the current position (ring: slot p % S; linear: p).
+    S = cache_k.shape[2]
+    if cfg.opt_dus_cache:
+        # opt: all sequences share the position (uniform-prefill engine) —
+        # dynamic-update-slice touches one (B,Hkv,1,D) row instead of
+        # select-rewriting the whole cache.
+        pos = jnp.mod(cache_len[0], S) if ring else cache_len[0]
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k[:, :, None, :].astype(cache_k.dtype), (0, 0, pos, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v[:, :, None, :].astype(cache_v.dtype), (0, 0, pos, 0))
+        if int8_kv:
+            cache_k_scale = jax.lax.dynamic_update_slice(
+                cache_k_scale, k_sc[:, :, None], (0, 0, pos))
+            cache_v_scale = jax.lax.dynamic_update_slice(
+                cache_v_scale, v_sc[:, :, None], (0, 0, pos))
+    else:
+        slot = jnp.mod(cache_len, S) if ring else cache_len
+        onehot = (jnp.arange(S)[None, :] == slot[:, None])  # (B, S)
+        sel = onehot[:, None, :, None]
+        cache_k = jnp.where(sel, k[:, :, None, :].astype(cache_k.dtype),
+                            cache_k)
+        cache_v = jnp.where(sel, v[:, :, None, :].astype(cache_v.dtype),
+                            cache_v)
+        if int8_kv:
+            cache_k_scale = jnp.where(onehot[:, None, :], k_sc[:, :, None],
+                                      cache_k_scale)
+            cache_v_scale = jnp.where(onehot[:, None, :], v_sc[:, :, None],
+                                      cache_v_scale)
+    new_len = cache_len + 1
+
+    if int8_kv:
+        att_k = dequantize_kv(cache_k, cache_k_scale, cfg.compute_dtype_)
+        att_v = dequantize_kv(cache_v, cache_v_scale, cfg.compute_dtype_)
+    else:
+        att_k, att_v = cache_k, cache_v
+
+    q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+    kj = jnp.arange(S)[None, :]
+    if ring:
+        # every written slot is live; the buffer size IS the window
+        live = kj < jnp.minimum(new_len, S)[:, None]
+        o = _masked_decode(q, att_k, att_v, live, intmax)
+    elif window > 0 and window < S:
+        # sliding window over a linear cache
+        start = jnp.maximum(new_len - window, 0)
+        live = (kj >= start[:, None]) & (kj < new_len[:, None])
+        o = _masked_decode(q, att_k, att_v, live, intmax)
+    elif cfg.interpret_kernels and not int8_kv:
+        o = flash_decode_op(q, att_k, att_v, new_len, intmax=intmax,
+                            interpret=True)
+    else:
+        live = kj < new_len[:, None]
+        o = _masked_decode(q, att_k, att_v, live, intmax)
+
+    y1 = jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(dt))
+    if int8_kv:
+        return y1, cache_k, cache_v, cache_k_scale, cache_v_scale
+    return y1, cache_k, cache_v
+
+
+def _masked_decode(q, cache_k, cache_v, live, intmax):
+    """jnp decode attention: q (B,Hq,D), cache (B,Hkv,S,D), live (B,S)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = cache_k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, cache_k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    if intmax:
+        m = jnp.max(jnp.ceil(s), axis=-1, keepdims=True)
+    else:
+        m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp2(s - m)
+    d = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(d > 0, p / jnp.where(d > 0, d, 1.0), 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, Hq, D)

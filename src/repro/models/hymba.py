@@ -1,0 +1,155 @@
+"""Hymba hybrid mixer: parallel attention heads + Mamba (selective SSM) heads.
+
+Each layer runs a sliding-window GQA attention branch (with Softermax — the
+half of the layer where the paper's technique applies) *in parallel* with a
+Mamba selective-SSM branch on the same normed input; branch outputs are
+RMS-normalized and averaged (Hymba's β-weighted mean, with learnable scales
+folded into the branch norms).
+
+Documented simplifications vs the full Hymba recipe (DESIGN.md):
+* all attention layers use the sliding window (the 3 full-attention layers
+  are windowed too — at the 500k-token cell full attention is the part that
+  cannot scale, and Hymba's long-range path is the SSM state);
+* meta tokens are stubbed out (the modality/register-token frontend is not
+  part of the assigned backbone).
+
+The SSM branch is softmax-free — softermax is inapplicable there by
+construction (noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import rmsnorm, rmsnorm_schema
+from repro.models.schema import ParamSpec
+from repro.parallel.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Mamba branch (selective SSM, diagonal A)
+# ---------------------------------------------------------------------------
+
+
+def mamba_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.d_inner or 2 * d
+    st = ssm.state
+    dt_rank = max(16, d // 16)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "act_mlp")),
+        "conv_w": ParamSpec((ssm.conv_width, di), ("conv", "act_mlp"),
+                            std=0.2),
+        "conv_b": ParamSpec((di,), ("act_mlp",), init="zeros"),
+        "w_bc": ParamSpec((di, 2 * st), ("act_mlp", "state")),
+        "dt_a": ParamSpec((di, dt_rank), ("act_mlp", None)),
+        "dt_b": ParamSpec((dt_rank, di), (None, "act_mlp")),
+        "dt_bias": ParamSpec((di,), ("act_mlp",), init="zeros"),
+        "a_log": ParamSpec((di, st), ("act_mlp", "state"), init="zeros"),
+        "d_skip": ParamSpec((di,), ("act_mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("act_mlp", "embed")),
+    }
+
+
+def _causal_conv(u, w, b, conv_state=None):
+    """Depthwise causal conv via shift-adds. u: (B,S,di); w: (cw,di).
+
+    conv_state: (B, cw-1, di) previous raw inputs (decode continuity)."""
+    B, S, di = u.shape
+    cw = w.shape[0]
+    prev = (jnp.zeros((B, cw - 1, di), u.dtype)
+            if conv_state is None else conv_state)
+    ext = jnp.concatenate([prev, u], axis=1)          # (B, S+cw-1, di)
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        out = out + ext[:, i:i + S] * w[i]
+    new_state = ext[:, -(cw - 1):] if cw > 1 else prev
+    return out + b, new_state
+
+
+def mamba_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                ssm_state=None, conv_state=None, return_state=False):
+    """x: (B,S,d) → (B,S,d) [+ states]."""
+    ssm = cfg.ssm
+    dt_ = x.dtype
+    B, S, d = x.shape
+    di = ssm.d_inner or 2 * d
+    st = ssm.state
+
+    uz = x @ params["in_proj"].astype(dt_)
+    u, z = uz[..., :di], uz[..., di:]
+    u_conv, new_conv = _causal_conv(u, params["conv_w"].astype(dt_),
+                                    params["conv_b"].astype(dt_), conv_state)
+    u_act = jax.nn.silu(u_conv)
+    u_act = shard_act(u_act, ("batch", "seq", "act_mlp"))
+
+    bc = u_act @ params["w_bc"].astype(dt_)
+    B_, C_ = bc[..., :st], bc[..., st:]
+    dt = jax.nn.softplus(
+        (jnp.tanh(u_act @ params["dt_a"].astype(dt_))
+         @ params["dt_b"].astype(dt_))
+        + params["dt_bias"].astype(dt_)).astype(jnp.float32)  # (B,S,di)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))          # (di,st) < 0
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp          # (B,di),(B,di),(B,st),(B,st)
+        decay = jnp.exp(dt_t[..., None] * A[None])             # (B,di,st)
+        h = h * decay + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h0 = (jnp.zeros((B, di, st), jnp.float32)
+          if ssm_state is None else ssm_state)
+    xs = (jnp.moveaxis(u_act.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C_.astype(jnp.float32), 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(dt_)                     # (B,S,di)
+    y = y + u_act * params["d_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    if return_state:
+        return out, h_fin, new_conv
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hymba mixer = parallel(attention, mamba)
+# ---------------------------------------------------------------------------
+
+
+def hymba_mixer_schema(cfg: ModelConfig):
+    return {
+        "attn": attn_mod.attention_schema(cfg),
+        "mamba": mamba_schema(cfg),
+        "attn_norm": rmsnorm_schema(cfg.d_model),
+        "mamba_norm": rmsnorm_schema(cfg.d_model),
+    }
+
+
+def hymba_mixer_apply(params, x, cfg: ModelConfig, *, positions):
+    a = attn_mod.attention_apply(params["attn"], x, cfg, positions=positions,
+                                 causal=True, window=cfg.window)
+    m = mamba_apply(params["mamba"], x, cfg)
+    return 0.5 * (rmsnorm(params["attn_norm"], a, cfg.norm_eps) +
+                  rmsnorm(params["mamba_norm"], m, cfg.norm_eps))
+
+
+def hymba_mixer_decode(params, x1, cfg: ModelConfig, *, cache_k, cache_v,
+                       cache_len, ssm_state, conv_state):
+    """Single-token hybrid decode. Attention uses a ring-buffer window cache."""
+    a1, new_k, new_v = attn_mod.attention_decode(
+        params["attn"], x1, cfg, cache_k=cache_k, cache_v=cache_v,
+        cache_len=cache_len, window=cfg.window, ring=True)
+    m1, new_h, new_conv = mamba_apply(
+        params["mamba"], x1[:, None, :], cfg,
+        ssm_state=ssm_state, conv_state=conv_state, return_state=True)
+    y1 = 0.5 * (rmsnorm(params["attn_norm"], a1, cfg.norm_eps) +
+                rmsnorm(params["mamba_norm"], m1[:, 0], cfg.norm_eps))
+    return y1, new_k, new_v, new_h, new_conv

@@ -1,0 +1,175 @@
+"""Shared neural-net layers: norms, MLPs, embeddings, rotary embeddings.
+
+All layers are functional: ``*_schema`` returns ParamSpecs, ``*_apply`` takes
+the materialized params. Compute runs in ``cfg.compute_dtype`` (bf16 on TPU)
+with fp32 norms/softmax; params stay fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamSpec
+from repro.parallel.sharding import shard_act
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_schema(dim: int, logical: str = "embed"):
+    return {"scale": ParamSpec((dim,), (logical,), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_schema(dim: int, logical: str = "embed"):
+    return {
+        "scale": ParamSpec((dim,), (logical,), init="ones"),
+        "bias": ParamSpec((dim,), (logical,), init="zeros"),
+    }
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain) with selectable activation
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(d_model: int, d_ff: int, gated: bool = True):
+    s = {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        s["wg"] = ParamSpec((d_model, d_ff), ("embed", "mlp"))
+    return s
+
+
+def _activate(h: jax.Array, activation: str) -> jax.Array:
+    if activation == "silu":
+        return jax.nn.silu(h)
+    if activation == "gelu":
+        return jax.nn.gelu(h)
+    if activation == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(activation)
+
+
+def mlp(params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    dt = x.dtype
+    h = x @ params["wi"].astype(dt)
+    h = _activate(h, activation)
+    if "wg" in params:
+        h = h * (x @ params["wg"].astype(dt))
+    # rank 3 = (batch, seq, ff): keep the seq shard under seq-parallel rules
+    logical = (("batch", "seq", "act_mlp") if h.ndim == 3 else
+               ("batch",) + (None,) * (h.ndim - 2) + ("act_mlp",))
+    h = shard_act(h, logical)
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits head
+# ---------------------------------------------------------------------------
+
+
+def embedding_schema(cfg: ModelConfig):
+    s = {"embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                ("vocab", "embed"), init="embed",
+                                std=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"))
+    return s
+
+
+def embed(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embedding"].astype(cfg.compute_dtype_)[tokens]
+    return shard_act(x, ("batch", "seq", "act_embed"))
+
+
+def logits(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final projection, fp32 output (softmax/loss numerics)."""
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(cfg.compute_dtype_).T
+    else:
+        w = params["unembed"].astype(cfg.compute_dtype_)
+    out = (x @ w).astype(jnp.float32)
+    return shard_act(out, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply RoPE over the last axis. x: (..., seq, d); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Fixed sinusoidal table (whisper encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(lg: jax.Array, labels: jax.Array,
+                       z_loss: float = 0.0,
+                       vocab_size: Optional[int] = None):
+    """Token-mean cross entropy with optional z-loss; ignores labels < 0.
+
+    Padded vocab entries are excluded by masking logits above vocab_size.
+    """
+    if vocab_size is not None and vocab_size < lg.shape[-1]:
+        neg = jnp.asarray(-1e9, lg.dtype)
+        mask = jnp.arange(lg.shape[-1]) < vocab_size
+        lg = jnp.where(mask, lg, neg)
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels_c[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom

@@ -1,0 +1,485 @@
+"""Decoder-only LM assembly, generic over all assigned families.
+
+One definition serves dense (qwen3/granite/nemotron/llama3.2/pixtral),
+MoE (moonshot), MoE+MLA (deepseek-v2), RWKV6 and Hymba — the per-layer mixer
+and FFN are selected by ``cfg``, and layers are stacked with ``lax.scan``
+(compile-time: one layer body regardless of depth; remat policy wraps the
+body).
+
+Entry points:
+  * ``lm_forward``      — full-sequence logits (+ MoE aux loss): train_4k /
+                          prefill lowering target.
+  * ``lm_loss``         — next-token CE + z-loss + aux.
+  * ``init_cache``      — decode-state tree (zeros or ShapeDtypeStructs).
+  * ``lm_prefill``      — forward + cache construction for serving.
+  * ``lm_decode_step``  — one token in, one token's logits out, cache updated.
+
+Cache trees per family (all leading-dim L for scan):
+  attention:  {k,v: (L,B,Hkv,S,Dh)}          + shared "len" (B,)
+  mla:        {ckv: (L,B,S,kv_lora), krope: (L,B,S,qk_rope)}
+  rwkv:       {shift_t, shift_c: (L,B,d), wkv: (L,B,H,n,n)}
+  hybrid:     {k,v: (L,B,Hkv,W,Dh) ring, ssm: (L,B,di,st), conv: (L,B,cw-1,di)}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import hymba as hymba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (cross_entropy_loss, embed, embedding_schema,
+                                 logits, mlp, mlp_schema, rmsnorm,
+                                 rmsnorm_schema)
+from repro.models.schema import ParamSpec, stack_schema
+from repro.parallel.sharding import shard_act
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def _mixer_schema(cfg: ModelConfig):
+    if cfg.family == "rwkv":
+        return rwkv_mod.rwkv_time_schema(cfg)
+    if cfg.family == "hybrid":
+        return hymba_mod.hymba_mixer_schema(cfg)
+    if cfg.mla is not None:
+        return mla_mod.mla_schema(cfg)
+    return attn_mod.attention_schema(cfg)
+
+
+def _ffn_schema(cfg: ModelConfig, dense: bool = False):
+    if cfg.family == "rwkv":
+        return rwkv_mod.rwkv_channel_schema(cfg)
+    if cfg.family == "moe" and not dense:
+        return moe_mod.moe_schema(cfg)
+    d_ff = cfg.moe.d_ff_dense if (dense and cfg.moe.d_ff_dense) else cfg.d_ff
+    gated = cfg.activation != "relu2"
+    return mlp_schema(cfg.d_model, d_ff, gated=gated)
+
+
+def block_schema(cfg: ModelConfig, dense_ffn: bool = False):
+    return {
+        "ln1": rmsnorm_schema(cfg.d_model),
+        "mixer": _mixer_schema(cfg),
+        "ln2": rmsnorm_schema(cfg.d_model),
+        "ffn": _ffn_schema(cfg, dense=dense_ffn),
+    }
+
+
+def lm_schema(cfg: ModelConfig):
+    n_head = cfg.moe.first_dense if cfg.family == "moe" else 0
+    s: Dict[str, Any] = {
+        "embed": embedding_schema(cfg),
+        "final_norm": rmsnorm_schema(cfg.d_model),
+        "blocks": stack_schema(block_schema(cfg), cfg.n_layers - n_head),
+    }
+    if n_head:
+        s["head_blocks"] = stack_schema(block_schema(cfg, dense_ffn=True),
+                                        n_head)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill lowering)
+# ---------------------------------------------------------------------------
+
+
+def maybe_cast_params(params, cfg: ModelConfig):
+    """opt_bf16_params: cast matrix params to compute dtype ONCE, before the
+    layer scan — FSDP weight all-gathers and grad reduce-scatters then move
+    bf16 instead of f32 (halves those collective bytes). 1-D params (norms)
+    stay f32; the optimizer still holds the f32 master copy."""
+    if not cfg.opt_bf16_params:
+        return params
+    dt = cfg.compute_dtype_
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dt)
+        if (hasattr(a, "ndim") and a.ndim >= 2 and
+            jnp.issubdtype(a.dtype, jnp.floating)) else a,
+        params)
+
+
+def _block_apply(bp, x, cfg: ModelConfig, positions, dense_ffn: bool):
+    """One layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    if cfg.family == "rwkv":
+        x = x + rwkv_mod.rwkv_time_apply(bp["mixer"], h, cfg)
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + rwkv_mod.rwkv_channel_apply(bp["ffn"], h2, cfg)
+        return x, aux
+    if cfg.family == "hybrid":
+        mix = hymba_mod.hymba_mixer_apply(bp["mixer"], h, cfg,
+                                          positions=positions)
+    elif cfg.mla is not None:
+        mix = mla_mod.mla_apply(bp["mixer"], h, cfg, positions=positions,
+                                window=cfg.window)
+    else:
+        mix = attn_mod.attention_apply(bp["mixer"], h, cfg,
+                                       positions=positions,
+                                       causal=cfg.causal, window=cfg.window)
+    x = x + mix
+    h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe" and not dense_ffn:
+        f, aux = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+    else:
+        f = mlp(bp["ffn"], h2, cfg.activation)
+    return x + f, aux
+
+
+def _scan_blocks(blocks, x, cfg: ModelConfig, positions, dense_ffn=False):
+    def body(carry, bp):
+        x, aux = carry
+        x, a = _block_apply(bp, x, cfg, positions, dense_ffn)
+        x = shard_act(x, ("batch", "seq", "act_embed"))
+        return (x, aux + a), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def lm_forward(
+    params,
+    tokens: jax.Array,            # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) vlm stub
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V_padded) fp32, aux_loss scalar)."""
+    B, S = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    aux = jnp.zeros((), jnp.float32)
+    if "head_blocks" in params:
+        x, a = _scan_blocks(params["head_blocks"], x, cfg, positions,
+                            dense_ffn=True)
+        aux = aux + a
+    x, a = _scan_blocks(params["blocks"], x, cfg, positions)
+    aux = aux + a
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits(params["embed"], x, cfg), aux
+
+
+def lm_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            z_loss: float = 1e-4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    lg, aux = lm_forward(params, batch["tokens"], cfg)
+    ce = cross_entropy_loss(lg, batch["labels"], z_loss=z_loss,
+                            vocab_size=cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Shapes/dtypes + logical axes of the decode cache. Returns
+    {name: (shape, dtype, logical_axes)} with the layer dim first."""
+    L = cfg.n_layers - (cfg.moe.first_dense if cfg.family == "moe" else 0)
+    Lh = cfg.n_layers - L
+    dt = cfg.compute_dtype_
+    d = cfg.d_model
+
+    # opt_cache_seq_shard: the cache sequence dim gets its own logical axis
+    # mapped to "model" — kv_heads (often 8 < 16) can't use the model axis,
+    # so without this the cache is REPLICATED model-axis-wide. Sharding seq
+    # turns decode attention into a distributed online softmax: each model
+    # rank reduces its seq shard, cross-shard combine is the softermax
+    # power-of-two renormalization.
+    seq_ax = "kv_seq" if cfg.opt_cache_seq_shard else "seq"
+
+    def attn_entries(n_layers, S):
+        dh = cfg.head_dim_
+        sh = (n_layers, batch, cfg.n_kv_heads, S, dh)
+        ax = ("layers", "batch", "kv_heads", seq_ax, "head_dim")
+        kv_dt = jnp.int8 if (cfg.opt_int8_kv and cfg.family != "hybrid") \
+            else dt
+        ent = {"k": (sh, kv_dt, ax), "v": (sh, kv_dt, ax)}
+        if kv_dt == jnp.int8:
+            ssh = (n_layers, batch, cfg.n_kv_heads, S)
+            sax = ("layers", "batch", "kv_heads", seq_ax)
+            ent["k_scale"] = (ssh, jnp.float32, sax)
+            ent["v_scale"] = (ssh, jnp.float32, sax)
+        return ent
+
+    out: Dict[str, Any] = {}
+    if cfg.family == "rwkv":
+        ssm = cfg.ssm
+        H = d // ssm.head_size
+        n = ssm.head_size
+        out["shift_t"] = ((L, batch, d), dt, ("layers", "batch", "act_embed"))
+        out["shift_c"] = ((L, batch, d), dt, ("layers", "batch", "act_embed"))
+        out["wkv"] = ((L, batch, H, n, n), jnp.float32,
+                      ("layers", "batch", "heads", "head_dim", None))
+    elif cfg.family == "hybrid":
+        ssm = cfg.ssm
+        di = ssm.d_inner or 2 * d
+        W = min(cfg.window or max_len, max_len)
+        out.update(attn_entries(L, W))
+        out["ssm"] = ((L, batch, di, ssm.state), jnp.float32,
+                      ("layers", "batch", "act_mlp", "state"))
+        out["conv"] = ((L, batch, ssm.conv_width - 1, di), dt,
+                       ("layers", "batch", None, "act_mlp"))
+    elif cfg.mla is not None:
+        a = cfg.mla
+        out["ckv"] = ((L, batch, max_len, a.kv_lora), dt,
+                      ("layers", "batch", seq_ax, "kv_lora"))
+        out["krope"] = ((L, batch, max_len, a.qk_rope), dt,
+                        ("layers", "batch", seq_ax, None))
+        if Lh:
+            out["head_ckv"] = ((Lh, batch, max_len, a.kv_lora), dt,
+                               ("layers", "batch", seq_ax, "kv_lora"))
+            out["head_krope"] = ((Lh, batch, max_len, a.qk_rope), dt,
+                                 ("layers", "batch", seq_ax, None))
+    else:
+        out.update(attn_entries(L, max_len))
+    out["len"] = ((batch,), jnp.int32, ("batch",))
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return {name: jnp.zeros(sh, dtype)
+            for name, (sh, dtype, _) in cache_spec(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _mixer_decode(bp, x1, cfg: ModelConfig, layer_cache, cache_len):
+    """One layer's mixer on one token. Returns (y1, new_layer_cache)."""
+    if cfg.family == "rwkv":
+        y1, shift, wkv = rwkv_mod.rwkv_time_decode(
+            bp["mixer"], x1, cfg, shift_state=layer_cache["shift_t"],
+            wkv_state=layer_cache["wkv"])
+        return y1, {**layer_cache, "shift_t": shift, "wkv": wkv}
+    if cfg.family == "hybrid":
+        y1, k, v, h, conv = hymba_mod.hymba_mixer_decode(
+            bp["mixer"], x1, cfg, cache_k=layer_cache["k"],
+            cache_v=layer_cache["v"], cache_len=cache_len,
+            ssm_state=layer_cache["ssm"], conv_state=layer_cache["conv"])
+        return y1, {"k": k, "v": v, "ssm": h, "conv": conv}
+    if cfg.mla is not None:
+        y1, ckv, krope = mla_mod.mla_decode(
+            bp["mixer"], x1, cfg, cache_ckv=layer_cache["ckv"],
+            cache_krope=layer_cache["krope"], cache_len=cache_len)
+        return y1, {"ckv": ckv, "krope": krope}
+    if "k_scale" in layer_cache:
+        y1, k, v, ks, vs = attn_mod.attention_decode(
+            bp["mixer"], x1, cfg, cache_k=layer_cache["k"],
+            cache_v=layer_cache["v"], cache_len=cache_len,
+            window=cfg.window, cache_k_scale=layer_cache["k_scale"],
+            cache_v_scale=layer_cache["v_scale"])
+        return y1, {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+    y1, k, v = attn_mod.attention_decode(
+        bp["mixer"], x1, cfg, cache_k=layer_cache["k"],
+        cache_v=layer_cache["v"], cache_len=cache_len, window=cfg.window)
+    return y1, {"k": k, "v": v}
+
+
+def _ffn_decode(bp, x1, cfg: ModelConfig, layer_cache, dense_ffn):
+    if cfg.family == "rwkv":
+        y1, shift = rwkv_mod.rwkv_channel_decode(
+            bp["ffn"], x1, cfg, shift_state=layer_cache["shift_c"])
+        return y1, {**layer_cache, "shift_c": shift}
+    if cfg.family == "moe" and not dense_ffn:
+        y, _ = moe_mod.moe_apply(bp["ffn"], x1[:, None, :], cfg)
+        return y[:, 0], layer_cache
+    return mlp(bp["ffn"], x1, cfg.activation), layer_cache
+
+
+def _block_decode(bp, x1, cfg, layer_cache, cache_len, dense_ffn=False):
+    h = rmsnorm(bp["ln1"], x1, cfg.norm_eps)
+    y, layer_cache = _mixer_decode(bp, h, cfg, layer_cache, cache_len)
+    x1 = x1 + y
+    h2 = rmsnorm(bp["ln2"], x1, cfg.norm_eps)
+    f, layer_cache = _ffn_decode(bp, h2, cfg, layer_cache, dense_ffn)
+    return x1 + f, layer_cache
+
+
+_HEAD_KEYS = {"head_ckv": "ckv", "head_krope": "krope"}
+
+
+def _split_cache(cache):
+    body = {k: v for k, v in cache.items()
+            if k != "len" and not k.startswith("head_")}
+    head = {tgt: cache[src] for src, tgt in _HEAD_KEYS.items()
+            if src in cache}
+    return body, head
+
+
+def lm_decode_step(
+    params,
+    tokens1: jax.Array,          # (B,) current token ids
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: logits for the next token + updated cache."""
+    params = maybe_cast_params(params, cfg)
+    cache_len = cache["len"]
+    table = params["embed"]["embedding"].astype(cfg.compute_dtype_)
+    if cfg.opt_onehot_embed and tokens1.shape[0] >= 8:
+        # one-hot matmul consumes the vocab-sharded table in place (the
+        # contraction is over the sharded vocab dim → tiny (B,d) psum)
+        # instead of replicating the table for a row gather. At tiny batch
+        # the full-table read costs more than the gather — gated on B.
+        oh = jax.nn.one_hot(tokens1, table.shape[0], dtype=table.dtype)
+        x1 = oh @ table
+    else:
+        x1 = table[tokens1]
+    x1 = shard_act(x1, ("batch", "act_embed"))
+
+    body_cache, head_cache = _split_cache(cache)
+    new_cache: Dict[str, jax.Array] = {}
+
+    if "head_blocks" in params:
+        def head_body(x1, xs):
+            bp, lc = xs
+            x1, lc = _block_decode(bp, x1, cfg, lc, cache_len, dense_ffn=True)
+            return x1, lc
+        x1, new_head = jax.lax.scan(head_body, x1,
+                                    (params["head_blocks"], head_cache))
+        for src, tgt in _HEAD_KEYS.items():
+            if tgt in new_head:
+                new_cache[src] = new_head[tgt]
+
+    def body(x1, xs):
+        bp, lc = xs
+        x1, lc = _block_decode(bp, x1, cfg, lc, cache_len)
+        return x1, lc
+
+    x1, new_body = jax.lax.scan(body, x1, (params["blocks"], body_cache))
+    new_cache.update(new_body)
+    new_cache["len"] = cache_len + 1
+
+    x1 = rmsnorm(params["final_norm"], x1, cfg.norm_eps)
+    lg = logits(params["embed"], x1[:, None, :], cfg)[:, 0]
+    return lg, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache construction); assumes full-length prompts
+# ---------------------------------------------------------------------------
+
+
+def _ring_place(k_seq: jax.Array, W: int):
+    """Place the last ≤W positions of (B,H,S,D) into a ring buffer (B,H,W,D)."""
+    S = k_seq.shape[2]
+    slots = jnp.arange(W)
+    p = S - 1 - jnp.mod(S - 1 - slots, W)          # source pos per slot
+    valid = p >= 0
+    gathered = jnp.take(k_seq, jnp.clip(p, 0, S - 1), axis=2)
+    return jnp.where(valid[None, None, :, None], gathered, 0)
+
+
+def lm_prefill(
+    params,
+    tokens: jax.Array,           # (B, S) full prompts
+    cfg: ModelConfig,
+    max_len: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (last-token logits (B,V), cache ready for decode)."""
+    B, S = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(params["embed"], tokens, cfg)
+
+    def pad_to(c, target_len):
+        pad = target_len - c.shape[2]
+        if pad <= 0:
+            return c[:, :, :target_len]
+        return jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    def layer_fwd(x, bp, dense_ffn):
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        entries = {}
+        if cfg.family == "rwkv":
+            y, shift, wkv = rwkv_mod.rwkv_time_apply(
+                bp["mixer"], h, cfg, return_state=True)
+            entries.update(shift_t=shift, wkv=wkv)
+        elif cfg.family == "hybrid":
+            a, k, v = attn_mod.attention_apply(
+                bp["mixer"]["attn"], h, cfg, positions=positions,
+                causal=True, window=cfg.window, return_kv=True)
+            m, ssm_h, conv = hymba_mod.mamba_apply(
+                bp["mixer"]["mamba"], h, cfg, return_state=True)
+            y = 0.5 * (rmsnorm(bp["mixer"]["attn_norm"], a, cfg.norm_eps) +
+                       rmsnorm(bp["mixer"]["mamba_norm"], m, cfg.norm_eps))
+            W = min(cfg.window or max_len, max_len)
+            entries.update(k=_ring_place(k, W), v=_ring_place(v, W),
+                           ssm=ssm_h, conv=conv)
+        elif cfg.mla is not None:
+            y, ckv, krope = mla_mod.mla_apply(
+                bp["mixer"], h, cfg, positions=positions, window=cfg.window,
+                return_cache=True)
+            entries.update(ckv=_pad_seq(ckv, max_len),
+                           krope=_pad_seq(krope, max_len))
+        else:
+            y, k, v = attn_mod.attention_apply(
+                bp["mixer"], h, cfg, positions=positions, causal=cfg.causal,
+                window=cfg.window, return_kv=True)
+            if cfg.opt_int8_kv:
+                kq, ks = attn_mod.quantize_kv(pad_to(k, max_len))
+                vq, vs = attn_mod.quantize_kv(pad_to(v, max_len))
+                entries.update(k=kq, v=vq, k_scale=ks, v_scale=vs)
+            else:
+                entries.update(k=pad_to(k, max_len), v=pad_to(v, max_len))
+        x = x + y
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "rwkv":
+            f, shift_c = rwkv_mod.rwkv_channel_apply(
+                bp["ffn"], h2, cfg, return_state=True)
+            entries["shift_c"] = shift_c
+        elif cfg.family == "moe" and not dense_ffn:
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        return x + f, entries
+
+    cache: Dict[str, jax.Array] = {}
+    if "head_blocks" in params:
+        def hbody(x, bp):
+            x, e = layer_fwd(x, bp, dense_ffn=True)
+            return x, e
+        x, head_entries = jax.lax.scan(hbody, x, params["head_blocks"])
+        for src, tgt in _HEAD_KEYS.items():
+            if tgt in head_entries:
+                cache[src] = head_entries[tgt]
+
+    def bbody(x, bp):
+        x, e = layer_fwd(x, bp, dense_ffn=False)
+        return x, e
+
+    x, entries = jax.lax.scan(bbody, x, params["blocks"])
+    cache.update(entries)
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(params["embed"], x[:, -1:, :], cfg)[:, 0]
+    return lg, cache
+
+
+def _pad_seq(c: jax.Array, target_len: int) -> jax.Array:
+    """Pad (B, S, D) to (B, target_len, D)."""
+    pad = target_len - c.shape[1]
+    if pad <= 0:
+        return c[:, :target_len]
+    return jnp.pad(c, ((0, 0), (0, pad), (0, 0)))

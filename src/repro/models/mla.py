@@ -1,0 +1,189 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with Softermax.
+
+Train/prefill uses the *expanded* formulation: the compressed KV latent
+``c_kv`` (rank ``kv_lora``) is up-projected to per-head keys/values and
+attention runs through the shared chunked online-softermax path (qk dim =
+qk_nope + qk_rope, v dim = v_head — the chunked kernel supports Dk != Dv).
+
+Decode uses the *absorbed* formulation faithful to DeepSeek inference: the
+cache stores only ``c_kv`` (B,S,kv_lora) + the shared roped key
+(B,S,qk_rope); queries are absorbed through the k up-projection so scores are
+computed directly against the latent — softmax (softermax here) over the
+latent scores, then the attention-weighted latent is pushed through the v
+up-projection. MLA changes *what* QK^T is; the softmax between the two
+matmuls is exactly where the paper's technique drops in.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.numerics import NEG_INF
+from repro.models.attention import _mode, chunked_attention
+from repro.models.layers import rmsnorm, rmsnorm_schema, rope
+from repro.models.schema import ParamSpec
+from repro.parallel.sharding import shard_act
+
+
+def mla_schema(cfg: ModelConfig):
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = a.qk_nope + a.qk_rope
+    s = {}
+    if a.q_lora > 0:
+        s["wq_a"] = ParamSpec((d, a.q_lora), ("embed", "q_lora"))
+        s["q_norm"] = rmsnorm_schema(a.q_lora, "q_lora")
+        s["wq_b"] = ParamSpec((a.q_lora, H, qk), ("q_lora", "heads", "head_dim"))
+    else:
+        s["wq"] = ParamSpec((d, H, qk), ("embed", "heads", "head_dim"))
+    s["wkv_a"] = ParamSpec((d, a.kv_lora + a.qk_rope), ("embed", "kv_lora"))
+    s["kv_norm"] = rmsnorm_schema(a.kv_lora, "kv_lora")
+    s["wk_b"] = ParamSpec((a.kv_lora, H, a.qk_nope),
+                          ("kv_lora", "heads", "head_dim"))
+    s["wv_b"] = ParamSpec((a.kv_lora, H, a.v_head),
+                          ("kv_lora", "heads", "head_dim"))
+    s["wo"] = ParamSpec((H, a.v_head, d), ("heads", "head_dim", "embed"))
+    return s
+
+
+def _queries(params, x, cfg: ModelConfig, positions):
+    """(B,S,d) → q_nope (B,H,S,nope), q_rope (B,H,S,rope)."""
+    a = cfg.mla
+    dt = cfg.compute_dtype_
+    if a.q_lora > 0:
+        cq = rmsnorm(params["q_norm"], x @ params["wq_a"].astype(dt),
+                     cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bhsk", cq, params["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :a.qk_nope], q[..., a.qk_nope:]
+    q_rope = rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params, x, cfg: ModelConfig, positions):
+    """(B,S,d) → c_kv (B,S,kv_lora) normed, k_rope (B,S,rope) roped."""
+    a = cfg.mla
+    dt = cfg.compute_dtype_
+    ckr = x @ params["wkv_a"].astype(dt)
+    c_kv = rmsnorm(params["kv_norm"], ckr[..., :a.kv_lora], cfg.norm_eps)
+    k_rope = rope(ckr[..., a.kv_lora:], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_apply(params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, window: int = 0,
+              return_cache: bool = False):
+    """Train/prefill MLA.
+
+    Expanded form (baseline): latent up-projected to per-head K (192) / V
+    (128) before attention — cross-chip K/V traffic and activation memory
+    scale with H·(192+128).
+
+    Absorbed form (``opt_mla_absorbed``): queries are pushed through the K
+    up-projection, attention runs against the 576-d latent as ONE shared KV
+    head (GQA group = n_heads), and V up-projection happens after the
+    weighted sum. Exactly equivalent by associativity:
+    q·(c@W_k) == (q@W_kᵀ)·c and p·(c@W_v) == (p·c)@W_v. This is DeepSeek's
+    own inference trick applied to the training graph — K/V are never
+    materialized, so sequence-parallel attention gathers 576 dims instead of
+    128 heads × 320 dims."""
+    a = cfg.mla
+    dt = cfg.compute_dtype_
+    B, S, d = x.shape
+    H = cfg.n_heads
+    premult, intmax = _mode(cfg)
+
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latent(params, x, cfg, positions)
+    scale = (a.qk_nope + a.qk_rope) ** -0.5 * premult
+
+    if cfg.opt_mla_absorbed:
+        q_abs = jnp.einsum("bhsn,rhn->bhsr", q_nope,
+                           params["wk_b"].astype(dt))   # (B,H,S,kv_lora)
+        q_full = jnp.concatenate([q_abs, q_rope], axis=-1)
+        q_full = q_full * jnp.asarray(scale, q_full.dtype)
+        k_full = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]
+        v_lat = c_kv[:, None]                           # (B,1,S,kv_lora)
+        q_full = shard_act(q_full, ("batch", "act_heads", "seq", None))
+        o_lat = chunked_attention(q_full, k_full, v_lat, causal=cfg.causal,
+                                  intmax=intmax, window=window,
+                                  chunk=cfg.attention_chunk)
+        o = jnp.einsum("bhsr,rhk->bhsk", o_lat, params["wv_b"].astype(dt))
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wk_b"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wv_b"].astype(dt))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, None], (B, H, S, a.qk_rope))],
+            axis=-1)
+        q = q * jnp.asarray(scale, q.dtype)
+        q = shard_act(q, ("batch", "act_heads", "seq", "head_dim"))
+        k = shard_act(k, ("batch", "act_heads", "seq", "head_dim"))
+        v = shard_act(v, ("batch", "act_heads", "seq", "head_dim"))
+        o = chunked_attention(q, k, v, causal=cfg.causal, intmax=intmax,
+                              window=window, chunk=cfg.attention_chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", o, params["wo"].astype(dt))
+    if return_cache:
+        return y, c_kv, k_rope
+    return y
+
+
+def mla_prefill_cache(params, x, cfg: ModelConfig, positions):
+    """Latent cache entries for the prefill tokens."""
+    return _latent(params, x, cfg, positions)
+
+
+def mla_decode(
+    params,
+    x1: jax.Array,               # (B, d)
+    cfg: ModelConfig,
+    *,
+    cache_ckv: jax.Array,        # (B, S, kv_lora)
+    cache_krope: jax.Array,      # (B, S, qk_rope)
+    cache_len: jax.Array,        # (B,)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form decode against the compressed latent cache."""
+    a = cfg.mla
+    dt = cfg.compute_dtype_
+    B = x1.shape[0]
+    pos1 = cache_len[:, None]                       # (B,1) current position
+
+    q_nope, q_rope = _queries(params, x1[:, None, :], cfg, pos1)
+    q_nope, q_rope = q_nope[:, :, 0], q_rope[:, :, 0]   # (B,H,·)
+    c1, kr1 = _latent(params, x1[:, None, :], cfg, pos1)
+
+    S = cache_ckv.shape[1]
+    if cfg.opt_dus_cache:
+        pos = cache_len[0]
+        cache_ckv = jax.lax.dynamic_update_slice(
+            cache_ckv, c1.astype(cache_ckv.dtype), (0, pos, 0))
+        cache_krope = jax.lax.dynamic_update_slice(
+            cache_krope, kr1.astype(cache_krope.dtype), (0, pos, 0))
+    else:
+        onehot = (jnp.arange(S)[None, :] == cache_len[:, None]).astype(dt)
+        cache_ckv = cache_ckv + onehot[..., None] * c1
+        cache_krope = cache_krope + onehot[..., None] * kr1
+    new_len = cache_len + 1
+
+    # absorb q through the k up-projection: scores live in latent space
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, params["wk_b"].astype(dt))
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_ckv) +
+         jnp.einsum("bhk,bsk->bhs", q_rope, cache_krope)
+         ).astype(jnp.float32)
+    scale = (a.qk_nope + a.qk_rope) ** -0.5
+    premult, intmax = _mode(cfg)
+    s = s * (scale * premult)
+    live = jnp.arange(S)[None, None, :] < new_len[:, None, None]
+    s = jnp.where(live, s, NEG_INF)
+    m = jnp.max(jnp.ceil(s) if intmax else s, axis=-1, keepdims=True)
+    p = jnp.exp2(s - m)
+    den = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(den > 0, p / jnp.where(den > 0, den, 1.0), 0.0)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p.astype(dt), cache_ckv)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["wv_b"].astype(dt))
+    y1 = jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(dt))
+    return y1, cache_ckv, cache_krope

@@ -1,0 +1,178 @@
+"""RWKV6 "Finch" time-mix / channel-mix (attention-free SSM family).
+
+Softermax applicability note (DESIGN.md §Arch-applicability): RWKV6 contains
+**no softmax anywhere** in its token-mixing path — the paper's technique is
+inapplicable by construction and this architecture runs without it (the
+serve-time logits softmax still uses softermax). It is included in the zoo
+per the assignment and exercises the framework's support for recurrent-state
+models (O(1) decode state, long_500k shape).
+
+Structure per layer (faithful to Finch, with documented simplifications):
+
+* token shift with data-dependent lerp: five mixing coefficients (r,k,v,w,g),
+  each ``mu_i + tanh(xx @ A_i) @ B_i`` (LoRA rank ``mix_lora``).
+* WKV6 recurrence per head (state n×n): ``y_t = r_t·(S + u⊙k_t⊗v_t)``,
+  ``S ← diag(w_t)·S + k_t⊗v_t`` with data-dependent decay
+  ``w_t = exp(-exp(w0 + tanh(z_w @ Aw) @ Bw))``.
+* per-head RMS normalization of the output, silu gate, output projection
+  (simplification: RMS instead of LayerNorm-with-bias group norm).
+* channel mix: static-shift lerp, ``sigmoid(r') * (relu(k')**2 @ Wv')``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamSpec
+from repro.parallel.sharding import shard_act
+
+_MIX = 5  # r, k, v, w, g
+
+
+def rwkv_time_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    n = ssm.head_size
+    H = d // n
+    r = ssm.mix_lora
+    rd = ssm.decay_lora
+    return {
+        "mu": ParamSpec((_MIX, d), (None, "embed"), init="zeros"),
+        "mix_a": ParamSpec((_MIX, d, r), (None, "embed", None), std=0.02),
+        "mix_b": ParamSpec((_MIX, r, d), (None, None, "embed"), std=0.02),
+        "wr": ParamSpec((d, H, n), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, H, n), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, H, n), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, d), ("embed", "act_embed")),
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "decay_a": ParamSpec((d, rd), ("embed", None), std=0.02),
+        "decay_b": ParamSpec((rd, d), (None, "embed"), std=0.02),
+        "u": ParamSpec((H, n), ("heads", "head_dim"), init="zeros"),
+        "out_norm": ParamSpec((H, n), ("heads", "head_dim"), init="ones"),
+        "wo": ParamSpec((d, d), ("embed", "act_embed")),
+    }
+
+
+def rwkv_channel_schema(cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "wk": ParamSpec((d, ff), ("embed", "mlp")),
+        "wv": ParamSpec((ff, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "act_embed")),
+    }
+
+
+def _ddlerp(params, x, xx):
+    """Data-dependent lerp for the five mix targets. x,xx: (B,S,d)."""
+    dt = x.dtype
+    mu = params["mu"].astype(dt)                       # (5, d)
+    a = params["mix_a"].astype(dt)                     # (5, d, r)
+    b = params["mix_b"].astype(dt)                     # (5, r, d)
+    lo = jnp.einsum("bsd,mdr->mbsr", xx, a)
+    lo = jnp.einsum("mbsr,mrd->mbsd", jnp.tanh(lo), b)
+    return x[None] + xx[None] * (mu[:, None, None, :] + lo)  # (5,B,S,d)
+
+
+def _decay(params, zw):
+    """w_t in (0,1): exp(-exp(w0 + tanh(zw@Aw)@Bw))."""
+    dt = zw.dtype
+    lo = jnp.tanh(zw @ params["decay_a"].astype(dt)) @ params["decay_b"].astype(dt)
+    return jnp.exp(-jnp.exp(
+        (params["w0"].astype(jnp.float32) + lo.astype(jnp.float32))))
+
+
+def _head_norm(params, y, eps):
+    """Per-head RMS norm. y: (B,S,H,n)."""
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * params["out_norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """WKV6 recurrence. r,k,v: (B,S,H,n); w: (B,S,H,n) decays in (0,1);
+    u: (H,n); state0: (B,H,n,n). Returns y (B,S,H,n), final state."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,n)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def rwkv_time_apply(
+    params, x: jax.Array, cfg: ModelConfig,
+    *, shift_state: jax.Array = None, wkv_state: jax.Array = None,
+    return_state: bool = False,
+):
+    """Time mix over a full sequence. x: (B,S,d)."""
+    B, S, d = x.shape
+    ssm = cfg.ssm
+    n = ssm.head_size
+    H = d // n
+    dt = x.dtype
+
+    prev = jnp.zeros((B, 1, d), dt) if shift_state is None else shift_state[:, None]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xx = x_prev - x
+    zr, zk, zv, zw, zg = _ddlerp(params, x, xx)
+
+    r = jnp.einsum("bsd,dhn->bshn", zr, params["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhn->bshn", zk, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhn->bshn", zv, params["wv"].astype(dt))
+    g = jax.nn.silu(zg @ params["wg"].astype(dt))
+    w = _decay(params, zw).reshape(B, S, H, n).astype(jnp.float32)
+
+    state0 = (jnp.zeros((B, H, n, n), jnp.float32)
+              if wkv_state is None else wkv_state)
+    y, state = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w,
+                         params["u"].astype(jnp.float32), state0)
+    y = _head_norm(params, y.astype(dt), cfg.norm_eps)
+    y = shard_act(y, ("batch", "seq", "act_heads", "head_dim"))
+    out = (y.reshape(B, S, d) * g) @ params["wo"].astype(dt)
+    if return_state:
+        return out, x[:, -1], state
+    return out
+
+
+def rwkv_time_decode(params, x1, cfg: ModelConfig, *, shift_state, wkv_state):
+    """Single-token time mix. x1: (B,d); states carried."""
+    out, new_shift, new_state = rwkv_time_apply(
+        params, x1[:, None, :], cfg,
+        shift_state=shift_state, wkv_state=wkv_state, return_state=True)
+    return out[:, 0], new_shift, new_state
+
+
+def rwkv_channel_apply(params, x: jax.Array, cfg: ModelConfig,
+                       *, shift_state=None, return_state: bool = False):
+    B, S, d = x.shape
+    dt = x.dtype
+    prev = jnp.zeros((B, 1, d), dt) if shift_state is None else shift_state[:, None]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * params["mu_k"].astype(dt)
+    xr = x + xx * params["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(dt)))
+    kk = shard_act(kk, ("batch", "seq", "act_mlp"))
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(dt)) * (
+        kk @ params["wv"].astype(dt))
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def rwkv_channel_decode(params, x1, cfg: ModelConfig, *, shift_state):
+    out, new_shift = rwkv_channel_apply(
+        params, x1[:, None, :], cfg, shift_state=shift_state,
+        return_state=True)
+    return out[:, 0], new_shift

@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d_model) directly to the encoder.
+The backbone is faithful: sinusoidal encoder positions, learned decoder
+positions, pre-LN LayerNorm blocks, GELU MLPs, bidirectional encoder
+self-attention, causal decoder self-attention + cross-attention. All three
+softmax sites run through Softermax.
+
+Decode uses a growing self-attention cache plus per-layer *static* cross
+K/V computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (cross_entropy_loss, layernorm,
+                                 layernorm_schema, logits, mlp, mlp_schema,
+                                 sinusoidal_positions)
+from repro.models.schema import ParamSpec, stack_schema
+from repro.parallel.sharding import shard_act
+
+
+def _enc_block_schema(cfg: ModelConfig):
+    return {
+        "ln1": layernorm_schema(cfg.d_model),
+        "attn": attn_mod.attention_schema(cfg),
+        "ln2": layernorm_schema(cfg.d_model),
+        "mlp": mlp_schema(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_block_schema(cfg: ModelConfig):
+    return {
+        "ln1": layernorm_schema(cfg.d_model),
+        "self_attn": attn_mod.attention_schema(cfg),
+        "ln_x": layernorm_schema(cfg.d_model),
+        "cross_attn": attn_mod.attention_schema(cfg),
+        "ln2": layernorm_schema(cfg.d_model),
+        "mlp": mlp_schema(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def whisper_schema(cfg: ModelConfig, max_dec_positions: int = 4096):
+    return {
+        "embed": {
+            "embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"), init="embed", std=1.0),
+            "dec_pos": ParamSpec((max_dec_positions, cfg.d_model),
+                                 (None, "embed"), std=0.02),
+        },
+        "enc_blocks": stack_schema(_enc_block_schema(cfg), cfg.n_enc_layers),
+        "enc_norm": layernorm_schema(cfg.d_model),
+        "dec_blocks": stack_schema(_dec_block_schema(cfg), cfg.n_layers),
+        "dec_norm": layernorm_schema(cfg.d_model),
+    }
+
+
+def whisper_encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, F, d) stub embeddings → encoder output (B, F, d)."""
+    B, F, d = frames.shape
+    x = frames.astype(cfg.compute_dtype_)
+    x = x + sinusoidal_positions(F, d).astype(x.dtype)[None]
+    x = shard_act(x, ("batch", "seq", "act_embed"))
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    ecfg = cfg.replace(rope_theta=0.0)  # positions are additive, not rotary
+
+    def body(x, bp):
+        h = layernorm(bp["ln1"], x, cfg.norm_eps)
+        x = x + attn_mod.attention_apply(bp["attn"], h, ecfg,
+                                         positions=positions, causal=False)
+        h2 = layernorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h2, "gelu")
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def whisper_forward(
+    params, frames: jax.Array, tokens: jax.Array, cfg: ModelConfig,
+) -> jax.Array:
+    """Teacher-forced decoder logits (B, S, V)."""
+    B, S = tokens.shape
+    enc = whisper_encode(params, frames, cfg)
+    F = enc.shape[1]
+    x = params["embed"]["embedding"].astype(cfg.compute_dtype_)[tokens]
+    x = x + params["embed"]["dec_pos"][:S].astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    dcfg = cfg.replace(rope_theta=0.0)
+
+    def body(x, bp):
+        h = layernorm(bp["ln1"], x, cfg.norm_eps)
+        x = x + attn_mod.attention_apply(bp["self_attn"], h, dcfg,
+                                         positions=positions, causal=True)
+        hx = layernorm(bp["ln_x"], x, cfg.norm_eps)
+        x = x + attn_mod.attention_apply(bp["cross_attn"], hx, dcfg,
+                                         positions=positions, causal=False,
+                                         x_kv=enc,
+                                         kv_positions=enc_positions)
+        h2 = layernorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h2, "gelu")
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    return logits(params["embed"], x, cfg.replace(tie_embeddings=True))
+
+
+def whisper_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                 z_loss: float = 1e-4):
+    lg = whisper_forward(params, batch["frames"], batch["tokens"], cfg)
+    ce = cross_entropy_loss(lg, batch["labels"], z_loss=z_loss,
+                            vocab_size=cfg.vocab_size)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cross-KV precomputed once; growing self cache
+# ---------------------------------------------------------------------------
+
+
+def whisper_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                       n_frames: int):
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    L = cfg.n_layers
+    kv = (L, batch, cfg.n_kv_heads, max_len, dh)
+    xkv = (L, batch, cfg.n_kv_heads, n_frames, dh)
+    ax = ("layers", "batch", "kv_heads", "seq", "head_dim")
+    return {
+        "k": (kv, dt, ax), "v": (kv, dt, ax),
+        "xk": (xkv, dt, ax), "xv": (xkv, dt, ax),
+        "len": ((batch,), jnp.int32, ("batch",)),
+    }
+
+
+def whisper_prefill(params, frames: jax.Array, cfg: ModelConfig,
+                    batch: int, max_len: int):
+    """Encode + build the static cross K/V cache (empty self cache)."""
+    enc = whisper_encode(params, frames, cfg)
+    dt = cfg.compute_dtype_
+
+    def body(_, bp):
+        xk = jnp.einsum("bsd,dhk->bhsk", enc, bp["cross_attn"]["wk"].astype(dt))
+        xv = jnp.einsum("bsd,dhk->bhsk", enc, bp["cross_attn"]["wv"].astype(dt))
+        return None, (xk, xv)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_blocks"])
+    dh = cfg.head_dim_
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, dh), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, dh), dt),
+        "xk": xk, "xv": xv,
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    return cache
+
+
+def whisper_decode_step(params, tokens1: jax.Array, cache, cfg: ModelConfig):
+    """One decoder token step. Returns (logits (B,V), cache)."""
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    B = tokens1.shape[0]
+    cache_len = cache["len"]
+    x1 = params["embed"]["embedding"].astype(dt)[tokens1]
+    pos_emb = jnp.take(params["embed"]["dec_pos"], cache_len, axis=0)
+    x1 = x1 + pos_emb.astype(dt)
+    dcfg = cfg.replace(rope_theta=0.0)
+
+    def body(x1, xs):
+        bp, k, v, xk, xv = xs
+        h = layernorm(bp["ln1"], x1, cfg.norm_eps)
+        y, k, v = attn_mod.attention_decode(bp["self_attn"], h, dcfg,
+                                            cache_k=k, cache_v=v,
+                                            cache_len=cache_len)
+        x1 = x1 + y
+        hx = layernorm(bp["ln_x"], x1, cfg.norm_eps)
+        x1 = x1 + _cross_decode(bp["cross_attn"], hx, xk, xv, dcfg)
+        h2 = layernorm(bp["ln2"], x1, cfg.norm_eps)
+        x1 = x1 + mlp(bp["mlp"], h2, "gelu")
+        return x1, (k, v)
+
+    x1, (k, v) = jax.lax.scan(
+        body, x1, (params["dec_blocks"], cache["k"], cache["v"],
+                   cache["xk"], cache["xv"]))
+    x1 = layernorm(params["dec_norm"], x1, cfg.norm_eps)
+    lg = logits(params["embed"], x1[:, None, :],
+                cfg.replace(tie_embeddings=True))[:, 0]
+    new_cache = {**cache, "k": k, "v": v, "len": cache_len + 1}
+    return lg, new_cache
+
+
+def _cross_decode(ap, x1, xk, xv, cfg: ModelConfig):
+    """Single-token cross attention against static encoder K/V."""
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    q = jnp.einsum("bd,dhk->bhk", x1, ap["wq"].astype(dt))
+    q = q * jnp.asarray(dh ** -0.5, q.dtype)
+    from repro.models.attention import _masked_decode, _mode
+    premult, intmax = _mode(cfg)
+    q = q * jnp.asarray(premult, q.dtype)
+    live = jnp.ones((x1.shape[0], xk.shape[2]), bool)
+    o = _masked_decode(q, xk, xv, live, intmax)
+    return jnp.einsum("bhk,hkd->bd", o, ap["wo"].astype(dt))

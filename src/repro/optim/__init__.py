@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWState, apply_updates, clip_by_global_norm,
+                               init_state, lr_schedule)
+
+__all__ = ["AdamWState", "apply_updates", "clip_by_global_norm", "init_state",
+           "lr_schedule"]

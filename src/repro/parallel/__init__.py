@@ -1,0 +1,1 @@
+"""Distribution: sharding rules engine + collectives (compressed allreduce)."""

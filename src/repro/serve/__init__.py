@@ -1,0 +1,3 @@
+from repro.serve.engine import GenerateResult, ServeEngine
+
+__all__ = ["GenerateResult", "ServeEngine"]

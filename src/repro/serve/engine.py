@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with slot management.
+
+``ServeEngine`` owns jitted prefill/decode closures and a KV-cache sized to
+(max_batch, max_len). ``generate`` serves a batch of prompts to completion
+(greedy or temperature sampling over the *softermax* distribution — the
+serve-time logits softmax also runs through the paper's base-2 form).
+
+Decoder-only LMs use this engine; whisper serving composes
+``whisper_prefill``/``whisper_decode_step`` directly (static cross-KV). A
+production scheduler would add paged KV blocks and per-slot admission on top
+of the same step functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.softermax import softmax_base2
+from repro.models.registry import model_fns
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray           # (B, max_new)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        if cfg.opt_bf16_params:
+            # cast matrix params ONCE at load — decode steps then run on the
+            # resident bf16 copy (the in-step cast is an identity)
+            from repro.models.lm import maybe_cast_params
+            params = maybe_cast_params(params, cfg)
+        self.params = params
+        self.max_len = max_len
+        self.fns = model_fns(cfg)
+        self._decode = jax.jit(
+            lambda p, t, c: self.fns.decode_step(p, t, c))
+        self._prefill = jax.jit(
+            lambda p, b: self.fns.prefill(p, b, max_len),
+            static_argnames=())
+
+    def _sample(self, lg: jax.Array, key, temperature: float) -> jax.Array:
+        # restrict to the real vocabulary (drop TP padding)
+        lg = lg[:, :self.cfg.vocab_size]
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        p = softmax_base2(lg / temperature, fold_log2e=True)
+        return jax.random.categorical(key, jnp.log(p + 1e-20)).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 temperature: float = 0.0, seed: int = 0) -> GenerateResult:
+        """prompts: (B, S) int32 full-length prompts."""
+        key = jax.random.PRNGKey(seed)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        lg, cache = self._prefill(self.params, batch)
+        out = []
+        tok = self._sample(lg, key, temperature)
+        out.append(tok)
+        for i in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            lg, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(lg, sub, temperature)
+            out.append(tok)
+        return GenerateResult(np.stack([np.asarray(t) for t in out], 1),
+                              max_new)

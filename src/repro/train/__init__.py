@@ -1,0 +1,5 @@
+from repro.train.loop import StragglerMonitor, train
+from repro.train.step import make_ddp_train_step, make_train_step
+
+__all__ = ["StragglerMonitor", "train", "make_ddp_train_step",
+           "make_train_step"]

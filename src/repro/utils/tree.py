@@ -1,0 +1,49 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_num_params(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast every floating-point leaf of a pytree to ``dtype``."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_allfinite(tree) -> jax.Array:
+    """Scalar bool: every float leaf of the tree is finite."""
+    leaves = [
+        jnp.all(jnp.isfinite(l))
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(leaves))

@@ -1,0 +1,174 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_op, scale_queries
+from repro.kernels.flash_decode import decode_ref, flash_decode
+from repro.kernels.softermax import softermax_op, softermax_rows_ref
+from repro.kernels.softermax_quant import (softermax_quant_op,
+                                           softermax_quant_ref)
+
+_rng = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=jnp.float32, scale=3.0):
+    x = _rng.normal(size=shape).astype(np.float32) * scale
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+class TestSoftermaxKernel:
+    @pytest.mark.parametrize("shape,bv", [
+        ((4, 128), 128), ((8, 1024), 256), ((5, 300), 128),
+        ((16, 64), 128), ((3, 7, 130), 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, bv, dtype):
+        x = _arr(shape, dtype)
+        got = softermax_op(x, block_v=bv, interpret=True)
+        want = softermax_rows_ref(x.astype(jnp.float32)).astype(dtype)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=TOL[dtype])
+
+    def test_base2_ablation(self):
+        x = _arr((8, 384))
+        got = softermax_op(x, intmax=False, interpret=True)
+        want = softermax_rows_ref(x, intmax=False)
+        np.testing.assert_allclose(got, want, atol=2e-6)
+
+    def test_masked_rows(self):
+        x = jnp.full((4, 256), -1e9, jnp.float32)
+        got = softermax_op(x, interpret=True)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+
+class TestSoftermaxQuantKernel:
+    @pytest.mark.parametrize("shape", [(6, 64), (4, 300), (8, 37), (2, 16)])
+    def test_bit_faithful_vs_ref(self, shape):
+        x = _arr(shape, scale=6.0)
+        got = softermax_quant_op(x, interpret=True)
+        want = softermax_quant_ref(x)
+        # ≤ 1 output ulp (Q(1,7)) — see kernels/softermax_quant/ref.py
+        assert float(jnp.abs(got - want).max()) <= 2 ** -7 + 1e-6
+
+    def test_quant_grid(self):
+        x = _arr((4, 64), scale=6.0)
+        got = np.asarray(softermax_quant_op(x, interpret=True))
+        # outputs live exactly on the Q(1,7) grid
+        np.testing.assert_allclose(got * 128, np.round(got * 128), atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal", [
+        (2, 4, 2, 256, 256, 64, True),
+        (1, 8, 8, 200, 200, 64, True),
+        (2, 4, 1, 128, 384, 64, True),     # decode-extension offset
+        (1, 2, 2, 96, 96, 128, False),
+        (1, 6, 3, 130, 130, 64, False),
+    ])
+    def test_matches_oracle(self, B, Hq, Hkv, Sq, Sk, D, causal):
+        q = scale_queries(_arr((B, Hq, Sq, D), scale=1.0), D, base2=True)
+        k = _arr((B, Hkv, Sk, D), scale=1.0)
+        v = _arr((B, Hkv, Sk, D), scale=1.0)
+        got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+        want = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16])
+    def test_bf16(self, dtype):
+        q = scale_queries(_arr((1, 2, 128, 64), dtype, 1.0), 64, base2=True)
+        k = _arr((1, 2, 128, 64), dtype, 1.0)
+        v = _arr((1, 2, 128, 64), dtype, 1.0)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=3e-2)
+
+    def test_custom_vjp_grads_flow(self):
+        q = scale_queries(_arr((1, 2, 64, 32), scale=1.0), 32, base2=True)
+        k = _arr((1, 2, 64, 32), scale=1.0)
+        v = _arr((1, 2, 64, 32), scale=1.0)
+
+        def f(q, k, v):
+            return jnp.sum(flash_attention_op(q, k, v, True, True, 32, 32,
+                                              True) ** 2)
+
+        gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        for g in (gq, gk, gv):
+            assert bool(jnp.all(jnp.isfinite(g)))
+            assert float(jnp.abs(g).max()) > 0
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+        (2, 4, 2, 512, 64), (3, 8, 1, 300, 64), (1, 2, 2, 1024, 128),
+    ])
+    def test_matches_oracle(self, B, Hq, Hkv, S, D):
+        q = _arr((B, Hq, D), scale=1.0) / np.sqrt(D)
+        k = _arr((B, Hkv, S, D), scale=1.0)
+        v = _arr((B, Hkv, S, D), scale=1.0)
+        lens = jnp.asarray(_rng.integers(1, S + 1, size=(B,)), jnp.int32)
+        got = flash_decode(q, k, v, lens, block_k=128, interpret=True)
+        want = decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_length_zero_safe(self):
+        q = _arr((1, 2, 64), scale=1.0)
+        k = _arr((1, 2, 128, 64), scale=1.0)
+        v = _arr((1, 2, 128, 64), scale=1.0)
+        got = flash_decode(q, k, v, jnp.zeros((1,), jnp.int32),
+                           interpret=True)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+
+class TestFlashBackwardKernel:
+    """Pallas flash backward (dq/dk/dv recomputed from saved (m,d) stats)
+    vs reference autodiff, incl. the base-2 ln(2) Jacobian factor."""
+
+    @pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal", [
+        (1, 2, 1, 128, 128, 32, True),
+        (2, 4, 2, 96, 96, 64, True),
+        (1, 2, 2, 64, 192, 32, True),   # decode-extension offset
+        (1, 2, 2, 80, 80, 32, False),
+    ])
+    def test_grads_match_reference(self, B, Hq, Hkv, Sq, Sk, D, causal):
+        q = scale_queries(_arr((B, Hq, Sq, D), scale=1.0), D, base2=True)
+        k = _arr((B, Hkv, Sk, D), scale=1.0)
+        v = _arr((B, Hkv, Sk, D), scale=1.0)
+        do = _arr((B, Hq, Sq, D), scale=1.0)
+
+        def f_kernel(q, k, v):
+            return jnp.sum(flash_attention_op(q, k, v, causal, True,
+                                              64, 64, True) * do)
+
+        def f_ref(q, k, v):
+            return jnp.sum(attention_ref(q, k, v, causal=causal,
+                                         intmax=True) * do)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            rel = float(jnp.abs(a - b).max()
+                        / jnp.maximum(jnp.abs(b).max(), 1e-9))
+            assert rel < 2e-4, rel
+
+    def test_forward_stats_shapes(self):
+        from repro.kernels.flash_attention.flash_attention import (
+            flash_attention)
+        q = _arr((1, 2, 70, 32), scale=0.3)
+        k = _arr((1, 2, 70, 32), scale=1.0)
+        v = _arr((1, 2, 70, 32), scale=1.0)
+        o, m, d = flash_attention(q, k, v, causal=True, block_q=32,
+                                  block_k=32, interpret=True,
+                                  return_stats=True)
+        assert m.shape == (1, 2, 70, 1) and d.shape == (1, 2, 70, 1)
+        # intmax: saved maxima are integral
+        np.testing.assert_allclose(np.asarray(m), np.round(np.asarray(m)))

@@ -1,0 +1,131 @@
+"""Hypothesis property tests for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core.softermax as sm
+from repro.core import quant
+from repro.launch.roofline import collective_bytes, shape_bytes
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+def _float_rows(draw, rows, cols, lo=-30.0, hi=30.0):
+    data = draw(st.lists(
+        st.lists(st.floats(lo, hi, allow_nan=False, width=32),
+                 min_size=cols, max_size=cols),
+        min_size=rows, max_size=rows))
+    return jnp.array(np.array(data, np.float32))
+
+
+@st.composite
+def rows(draw, max_rows=4, max_cols=33):
+    r = draw(st.integers(1, max_rows))
+    c = draw(st.integers(1, max_cols))
+    return _float_rows(draw, r, c)
+
+
+class TestSoftermaxProperties:
+    @_settings
+    @given(rows())
+    def test_simplex(self, x):
+        y = sm.softermax(x)
+        assert bool(jnp.all(y >= 0))
+        np.testing.assert_allclose(jnp.sum(y, -1), 1.0, atol=1e-4)
+
+    @_settings
+    @given(rows())
+    def test_shift_invariance(self, x):
+        # softmax-family invariance: softermax(x + c) == softermax(x)
+        y1 = sm.softermax(x)
+        y2 = sm.softermax(x + 7.0)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+    @_settings
+    @given(rows())
+    def test_intmax_equals_base2(self, x):
+        np.testing.assert_allclose(
+            sm.softermax(x), sm.softmax_base2(x), atol=1e-4)
+
+    @_settings
+    @given(rows())
+    def test_online_scan_equals_closed_form(self, x):
+        np.testing.assert_allclose(
+            sm.softermax_online_scan(x, block=8), sm.softermax(x), atol=1e-4)
+
+    @_settings
+    @given(rows())
+    def test_monotone_order_preserved(self, x):
+        # higher score ⇒ (weakly) higher probability within a row
+        y = np.asarray(sm.softermax(x))
+        xs = np.asarray(x)
+        for r in range(xs.shape[0]):
+            order = np.argsort(xs[r], kind="stable")
+            assert np.all(np.diff(y[r][order]) >= -1e-6)
+
+
+class TestQuantProperties:
+    @_settings
+    @given(st.floats(-40, 40, allow_nan=False, width=32))
+    def test_qformat_roundtrip_within_half_ulp(self, v):
+        fmt = quant.QFormat(6, 2)
+        q = float(fmt.quantize_exact(jnp.float32(v)))
+        if fmt.min_value <= v <= fmt.max_value:
+            assert abs(q - v) <= 0.5 / fmt.scale + 1e-6
+        assert fmt.min_value <= q <= fmt.max_value
+
+    @_settings
+    @given(st.floats(-20, 0, allow_nan=False, width=32))
+    def test_lpw_exp2_relative_error(self, t):
+        got = float(quant.lpw_exp2(jnp.float32(t)))
+        want = 2.0 ** t
+        # 4-segment LPW + Q(1,15): ~1% relative or 1 ulp absolute
+        assert abs(got - want) <= max(0.011 * want, 2 ** -15 + 1e-9)
+
+    @_settings
+    @given(st.floats(0.25, 900, allow_nan=False, width=32))
+    def test_lpw_reciprocal_relative_error(self, d):
+        got = float(quant.lpw_reciprocal(jnp.float32(d)))
+        want = 1.0 / d
+        # Q(1,7) mantissa: ~1.6% worst-case relative error
+        assert abs(got - want) <= 0.02 * want + 1e-9
+
+    @_settings
+    @given(st.integers(1, 2 ** 30), st.sampled_from(["f32", "bf16", "s8"]))
+    def test_shape_bytes(self, n, dt):
+        per = {"f32": 4, "bf16": 2, "s8": 1}[dt]
+        assert shape_bytes(dt, str(n)) == n * per
+
+
+class TestCollectiveParser:
+    def test_while_trip_count_multiplies(self):
+        hlo = """
+HloModule m
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  ROOT %t = tuple()
+}
+
+ENTRY %main () -> f32[64] {
+  %w = (s32[], f32[64]) while(%init), condition=%c, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %r = f32[64]{0} get-tuple-element(%w)
+}
+"""
+        out = collective_bytes(hlo)
+        # 64 f32 = 256B; all-reduce ring 2*(15/16)*256 = 480B; ×12 trips
+        np.testing.assert_allclose(out["all-reduce"], 480 * 12)
+
+    def test_plain_collectives_counted_once(self):
+        hlo = """
+HloModule m
+
+ENTRY %main () -> f32[128] {
+  %ag = f32[128]{0} all-gather(%x), replica_groups=[2,8]<=[16]
+  ROOT %cp = f32[128]{0} collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+        out = collective_bytes(hlo)
+        np.testing.assert_allclose(out["all-gather"], 512 * 7 / 8)
+        np.testing.assert_allclose(out["collective-permute"], 512)

@@ -1,0 +1,128 @@
+"""Distributed attention/pipeline tests (8 virtual devices, subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": SRC}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+class TestRingAttention:
+    def test_matches_chunked_and_differentiable(self):
+        out = run_sub("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.parallel.ring_attention import ring_attention
+            from repro.models.attention import chunked_attention
+            rng = np.random.default_rng(0)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            B, Hq, Hkv, S, D = 2, 4, 2, 64, 16
+            q = jnp.asarray(rng.normal(size=(B,Hq,S,D)), jnp.float32) / 4
+            k = jnp.asarray(rng.normal(size=(B,Hkv,S,D)), jnp.float32)
+            v = jnp.asarray(rng.normal(size=(B,Hkv,S,D)), jnp.float32)
+            for causal in (True, False):
+                got = jax.jit(lambda q,k,v: ring_attention(
+                    q,k,v,mesh,causal=causal))(q,k,v)
+                want = chunked_attention(q,k,v,causal=causal,intmax=True,
+                                         chunk=16)
+                assert float(jnp.abs(got-want).max()) < 2e-5
+            g = jax.grad(lambda q: jnp.sum(ring_attention(
+                q,k,v,mesh,causal=True)**2))(q)
+            assert bool(jnp.all(jnp.isfinite(g)))
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_distributed_softermax_renorm_is_exact(self):
+        """The cross-chip combine uses integer-exponent rescales: the ring
+        result equals the single-device closed form bit-for-bit-tolerance
+        even with adversarial score magnitudes."""
+        out = run_sub("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.parallel.ring_attention import ring_attention
+            from repro.models.attention import chunked_attention
+            mesh = jax.make_mesh((1, 8), ("data", "model"))
+            rng = np.random.default_rng(1)
+            q = jnp.asarray(rng.normal(size=(1,2,64,16)) * 8, jnp.float32)
+            k = jnp.asarray(rng.normal(size=(1,2,64,16)) * 8, jnp.float32)
+            v = jnp.asarray(rng.normal(size=(1,2,64,16)), jnp.float32)
+            got = jax.jit(lambda q,k,v: ring_attention(
+                q,k,v,mesh,causal=True))(q,k,v)
+            want = chunked_attention(q,k,v,causal=True,intmax=True,chunk=8)
+            assert float(jnp.abs(got-want).max()) < 5e-5
+            print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestPipeline:
+    def test_gpipe_matches_sequential(self):
+        out = run_sub("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.parallel.pipeline import pipeline_apply
+            from repro.models.registry import get_config, reduce_config
+            from repro.models import lm as lm_mod
+            from repro.models.schema import init_params
+            mesh = jax.make_mesh((4, 2), ("pod", "data"))
+            cfg = reduce_config(get_config("llama3.2-3b")).replace(
+                n_layers=8, remat="none")
+            params = init_params(jax.random.PRNGKey(0), lm_mod.lm_schema(cfg))
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.normal(size=(8, 16, cfg.d_model)) * 0.1,
+                            jnp.float32)
+            def stage_fn(layer_params, x):
+                S = x.shape[1]
+                pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                       (x.shape[0], S))
+                def body(x, bp):
+                    x, _ = lm_mod._block_apply(bp, x, cfg, pos, False)
+                    return x, None
+                return jax.lax.scan(body, x, layer_params)[0]
+            want = stage_fn(params["blocks"], x)
+            got = jax.jit(lambda p, x: pipeline_apply(
+                p, x, mesh, stage_fn, microbatches=4))(params["blocks"], x)
+            rel = float(jnp.abs(got - want).max()) / float(
+                jnp.abs(want).max())
+            assert rel < 5e-4, rel   # float reassociation across partitions
+            g = jax.grad(lambda p: jnp.sum(pipeline_apply(
+                p, x, mesh, stage_fn, microbatches=4) ** 2))(
+                params["blocks"])
+            assert all(bool(jnp.all(jnp.isfinite(l)))
+                       for l in jax.tree_util.tree_leaves(g))
+            print("OK rel", rel)
+        """)
+        assert "OK" in out
+
+    def test_microbatch_count_invariance(self):
+        """Different microbatch counts give the same result (schedule-only)."""
+        out = run_sub("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.parallel.pipeline import pipeline_apply
+            mesh = jax.make_mesh((4, 2), ("pod", "data"))
+            # toy stage: affine per layer
+            L, d = 8, 16
+            rng = np.random.default_rng(0)
+            w = jnp.asarray(rng.normal(size=(L, d, d)) * 0.1, jnp.float32)
+            x = jnp.asarray(rng.normal(size=(8, 4, d)), jnp.float32)
+            def stage_fn(ws, x):
+                def body(x, wi):
+                    return jnp.tanh(x @ wi), None
+                return jax.lax.scan(body, x, ws)[0]
+            outs = [jax.jit(lambda w, x, m=m: pipeline_apply(
+                w, x, mesh, stage_fn, microbatches=m))(w, x)
+                for m in (2, 4, 8)]
+            for o in outs[1:]:
+                np.testing.assert_allclose(np.asarray(outs[0]),
+                                           np.asarray(o), atol=1e-6)
+            print("OK")
+        """)
+        assert "OK" in out

@@ -1,0 +1,120 @@
+"""Core algorithm tests: the paper's Figure-3 progression + §III.C claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.softermax as sm
+from repro.core.numerics import LOG2_E, NEG_INF
+
+
+def _rand(shape, scale=5.0, seed=0):
+    return jnp.array(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+        * scale)
+
+
+class TestBaseReplacement:
+    def test_base2_folded_equals_softmax_e(self):
+        x = _rand((8, 100))
+        np.testing.assert_allclose(
+            sm.softmax_base2(x, fold_log2e=True), sm.softmax_e(x),
+            atol=2e-6)
+
+    def test_base2_is_permutation_equivariant_simplex(self):
+        x = _rand((4, 64))
+        y = sm.softmax_base2(x)
+        np.testing.assert_allclose(jnp.sum(y, -1), 1.0, atol=1e-5)
+        assert bool(jnp.all(y >= 0))
+
+    def test_base2_equals_softmax_of_scaled_input(self):
+        # softmax_2(x) == softmax_e(x * ln2) — the finetuning target's math
+        x = _rand((4, 64))
+        np.testing.assert_allclose(
+            sm.softmax_base2(x), sm.softmax_e(x * np.log(2.0)), atol=2e-6)
+
+
+class TestOnlineNormalization:
+    def test_paper_worked_example(self):
+        # §III.C: [2,1,3] gives d = 1.75 with base-2 online renormalization
+        x = jnp.array([[2.0, 1.0, 3.0]])
+        m = jnp.max(jnp.ceil(x))
+        d = jnp.sum(jnp.exp2(x - m))
+        assert float(m) == 3.0
+        np.testing.assert_allclose(float(d), 1.75, atol=1e-7)
+
+    def test_online_matches_two_pass(self):
+        x = _rand((16, 257))
+        np.testing.assert_allclose(
+            sm.softmax_online(x), sm.softmax_e(x), atol=2e-6)
+
+    def test_block_online_matches_closed_form(self):
+        x = _rand((8, 300))
+        for block in (16, 128, 300):
+            np.testing.assert_allclose(
+                sm.softermax_online_scan(x, block=block), sm.softermax(x),
+                atol=2e-6)
+
+
+class TestIntegerMax:
+    def test_intmax_preserves_distribution(self):
+        # integer max changes shared scaling only: softermax == softmax_base2
+        x = _rand((32, 128))
+        np.testing.assert_allclose(
+            sm.softermax(x), sm.softmax_base2(x), atol=2e-6)
+
+    def test_renorm_factors_are_exact_powers_of_two(self):
+        x = _rand((4, 64))
+        m = jnp.max(jnp.ceil(x), -1)
+        assert bool(jnp.all(m == jnp.round(m)))  # integer exponents
+        f = jnp.exp2(m - (m + 3))                # 2^(-3): exact in fp
+        np.testing.assert_array_equal(f, 0.125)
+
+
+class TestMaskingAndEdgeCases:
+    def test_fully_masked_row_is_finite(self):
+        x = jnp.full((2, 32), NEG_INF)
+        for fn in (sm.softermax, sm.softmax_base2, sm.softmax_e):
+            assert bool(jnp.all(jnp.isfinite(fn(x))))
+
+    def test_single_element_row(self):
+        x = jnp.array([[3.7]])
+        np.testing.assert_allclose(sm.softermax(x), 1.0, atol=2e-7)
+
+    def test_large_dynamic_range(self):
+        x = jnp.array([[100.0, -100.0, 0.0]])
+        y = sm.softermax(x)
+        np.testing.assert_allclose(y[0, 0], 1.0, atol=1e-6)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+class TestFixedPoint:
+    def test_fixed_point_close_to_exact(self):
+        x = _rand((16, 64), scale=4.0)
+        err = jnp.abs(sm.softermax_fixed(x) - sm.softmax_base2(x)).max()
+        # pre-finetuning error budget: a few output ulps (Q(1,7) = 1/128)
+        assert float(err) < 8 / 128
+
+    def test_fixed_point_rows_normalized(self):
+        x = _rand((16, 64), scale=4.0)
+        s = jnp.sum(sm.softermax_fixed(x), -1)
+        np.testing.assert_allclose(s, 1.0, atol=0.06)
+
+    def test_fixed_point_is_differentiable_ste(self):
+        x = _rand((4, 16))
+        g = jax.grad(lambda t: jnp.sum(sm.softermax_fixed(t) ** 2))(x)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.abs(g).max()) > 0
+
+
+class TestAttentionSoftmaxDispatch:
+    @pytest.mark.parametrize("impl", ["softmax", "base2", "base2_folded",
+                                      "softermax", "softermax_fixed"])
+    def test_all_impls_normalize(self, impl):
+        x = _rand((2, 3, 32))
+        y = sm.attention_softmax(x, impl=impl)
+        np.testing.assert_allclose(jnp.sum(y, -1), 1.0, atol=0.06)
+
+    def test_unknown_impl_raises(self):
+        with pytest.raises(ValueError):
+            sm.attention_softmax(_rand((2, 4)), impl="nope")
