@@ -38,6 +38,10 @@ def main() -> None:
     else:
         table3_accuracy.main()
 
+    print("# Serving throughput — continuous batching (paged KV) vs static")
+    from benchmarks import serve_throughput
+    serve_throughput.main(["--fast"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

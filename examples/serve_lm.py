@@ -1,6 +1,10 @@
-"""Serving driver: batched generation with softermax decode attention.
+"""Serving driver: continuous batching with softermax decode attention.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b --reduced
+Submits a mixed-length batch of prompts to the paged ``ContinuousEngine``
+and streams tokens as they decode. Runs the reduced (CPU smoke) config by
+default; pass --full for the real model dimensions.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b
 """
 import argparse
 import time
@@ -8,40 +12,56 @@ import time
 import numpy as np
 
 from repro.models.registry import get_config, model_fns, reduce_config
-from repro.serve import ServeEngine
+from repro.serve import ContinuousEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="run the full-size config (default: reduced)")
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=64)
     args = ap.parse_args()
 
     import jax
     cfg = get_config(args.arch)
-    if args.reduced:
+    if not args.full:
         cfg = reduce_config(cfg)
     fns = model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params,
-                      max_len=args.prompt_len + args.max_new)
+    eng = ContinuousEngine(
+        cfg, params, block_size=args.block_size,
+        num_blocks=args.num_blocks, max_batch=args.requests,
+        max_len=args.prompt_len + args.max_new)
 
     rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+    # mixed lengths: the whole point of per-request paged admission
+    lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
+                        args.requests)
+    handles = [eng.submit(
+        rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32),
+        args.max_new, temperature=args.temperature) for n in lens]
+
     t0 = time.time()
-    res = eng.generate(prompts, args.max_new, temperature=args.temperature)
+    results = eng.run(on_token=lambda rid, toks:
+                      print(f"  req{rid} += {toks}"))
     dt = time.time() - t0
-    toks = args.batch * args.max_new
-    print(f"arch={cfg.name} batch={args.batch} new_tokens={args.max_new}")
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s incl. prefill+compile)")
-    for i, row in enumerate(res.tokens[:2]):
-        print(f"seq{i}:", row.tolist())
+
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"prompt_lens={lens.tolist()}")
+    m = eng.metrics
+    print(f"generated {m.tokens_out} tokens in {dt:.2f}s "
+          f"({m.tokens_out / dt:.1f} tok/s incl. prefill+compile); "
+          f"peak pool use {m.peak_blocks}/{args.num_blocks} blocks, "
+          f"{m.preemptions} preemptions")
+    for h in handles[:2]:
+        r = results[h.req_id]
+        print(f"req{h.req_id} (ttft {r.ttft * 1e3:.0f}ms): {r.tokens}")
 
 
 if __name__ == "__main__":

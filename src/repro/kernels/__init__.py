@@ -4,4 +4,6 @@ softermax/        row-wise Softermax, two-phase (Unnormed + Normalization unit)
 softermax_quant/  bit-faithful fixed-point Softermax (Table-I Q-formats, LPW)
 flash_attention/  fused attention with the Softermax online recurrence
 flash_decode/     single-token decode attention over long KV caches
+flash_decode_paged/  decode attention over a paged block pool via block
+                  tables (scalar-prefetch gather; serving engine hot path)
 """

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: paged single-token decode attention with Softermax.
+
+Same Unnormed-Softmax-Unit dataflow as ``kernels/flash_decode`` — running
+IntMax + running denominator with power-of-two rescales, fused with the A·V
+accumulation — but the KV cache is a *block pool*: a flat array of fixed-size
+physical blocks, indirected through a per-sequence block table. Because the
+Softermax recurrence is order-free (every rescale is an exact exponent add),
+blocks can be streamed in table order with no pre-pass over the scores, which
+is exactly what makes the paged layout free for this kernel.
+
+The block table is a scalar-prefetch operand (``PrefetchScalarGridSpec``):
+its entries are available *before* the kernel body runs, so the KV BlockSpec
+index map performs the gather — each grid step DMAs one physical block from
+the pool directly into VMEM. Grid: ``(B*Hq, blocks_per_seq)``; the kv axis is
+sequential and scratch carries (m, d, acc) across it.
+
+Table entries past a sequence's length may be garbage (the pool's reserved
+block 0): the length mask zeroes their contribution and the gather of block 0
+is a wasted-but-harmless DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+from repro.core.numerics import NEG_INF
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_scr, m_scr, d_scr, *, intmax: bool,
+                         block_size: int):
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        d_scr[...] = jnp.zeros_like(d_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0, 0]
+    k_start = j * block_size
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (BS, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (1, BS)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        sl = jnp.ceil(s) if intmax else s
+        m_new = jnp.maximum(m_prev, jnp.max(sl, axis=1, keepdims=True))
+        alpha = jnp.exp2(m_prev - m_new)              # exact power-of-two
+        p = jnp.exp2(s - m_new)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d_scr[...] = d_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _fin():
+        d = d_scr[...]
+        recip = jnp.where(d > 0, 1.0 / jnp.where(d > 0, d, 1.0), 0.0)
+        o_ref[0] = (acc_scr[...] * recip).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("intmax", "interpret"))
+def flash_decode_paged(
+    q: jax.Array,             # (B, Hq, D) — pre-scaled single-token queries
+    k_pool: jax.Array,        # (N, Hkv, BS, D) physical block pool
+    v_pool: jax.Array,        # (N, Hkv, BS, D)
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids
+    lengths: jax.Array,       # (B,) int32 valid cache lengths
+    *,
+    intmax: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    N, Hkv, BS, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    group = Hq // Hkv
+
+    qf = q.reshape(B * Hq, 1, D)
+    lens = lengths.astype(jnp.int32).reshape(B, 1)
+    bt = block_tables.astype(jnp.int32)
+
+    def kv_map(bh, j, bt_ref):
+        return (bt_ref[bh // Hq, j], (bh % Hq) // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, j, bt_ref: (bh // Hq, 0)),
+            pl.BlockSpec((1, 1, D), lambda bh, j, bt_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, BS, D), kv_map),
+            pl.BlockSpec((1, 1, BS, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, j, bt_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, intmax=intmax,
+                          block_size=BS),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(bt, lens, qf, k_pool, v_pool)
+
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode_paged.flash_decode_paged import (
+    flash_decode_paged)
+from repro.kernels.flash_decode_paged.ref import gather_kv, paged_decode_ref
+
+
+def flash_decode_paged_op(q, k_pool, v_pool, block_tables, lengths, *,
+                          intmax: bool = True,
+                          interpret: bool = False) -> jax.Array:
+    return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                              intmax=intmax, interpret=interpret)
+
+
+__all__ = ["flash_decode_paged_op", "paged_decode_ref", "gather_kv"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the paged decode kernel.
+
+``gather_kv`` materializes a request's logical cache from the pool through
+its block table; ``paged_decode_ref`` is then exactly the contiguous decode
+oracle on the gathered cache. This is also the CPU execution path of the
+serving engine (``serve/paged_step.py``) — XLA turns the block-table gather
+into one take per step, and the attention math is bit-for-bit the contiguous
+``_masked_decode`` computation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+def gather_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(N, Hkv, BS, D) pool + (B, nb) table -> (B, Hkv, nb*BS, D) caches."""
+    B, nb = block_tables.shape
+    _, Hkv, BS, D = pool.shape
+    g = pool[block_tables]                    # (B, nb, Hkv, BS, D)
+    g = jnp.moveaxis(g, 2, 1)                 # (B, Hkv, nb, BS, D)
+    return g.reshape(B, Hkv, nb * BS, D)
+
+
+def paged_decode_ref(
+    q: jax.Array,             # (B, Hq, D) pre-scaled
+    k_pool: jax.Array,        # (N, Hkv, BS, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32
+    *,
+    intmax: bool = True,
+) -> jax.Array:
+    k = gather_kv(k_pool, block_tables)
+    v = gather_kv(v_pool, block_tables)
+    return decode_ref(q, k, v, lengths, intmax=intmax)

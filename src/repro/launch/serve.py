@@ -1,7 +1,8 @@
-"""Production serving launcher: batched generation with softermax decode.
+"""Production serving launcher: static-slot or continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-        --batch 4 --prompt-len 32 --max-new 16
+        --engine paged --batch 8 --prompt-len 32 --max-new 16 \
+        --block-size 16 --num-blocks 128
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.registry import (GRID_ARCHS, get_config, model_fns,
                                    reduce_config)
 from repro.parallel.sharding import SERVE_RULES, sharding_context
-from repro.serve import ServeEngine
+from repro.serve import ContinuousEngine, ServeEngine
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
@@ -27,10 +28,16 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--optimized", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--engine", choices=("static", "paged"),
+                    default="static")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per physical KV block")
+    ap.add_argument("--num-blocks", type=int, default=128,
+                    help="paged engine: physical blocks in the pool")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,20 +51,43 @@ def main() -> None:
     with sharding_context(mesh, SERVE_RULES):
         fns = model_fns(cfg)
         params = fns.init(jax.random.PRNGKey(0))
-        eng = ServeEngine(cfg, params,
-                          max_len=args.prompt_len + args.max_new)
         rng = np.random.default_rng(0)
         prompts = rng.integers(1, cfg.vocab_size,
                                (args.batch, args.prompt_len)).astype(np.int32)
         t0 = time.time()
-        res = eng.generate(prompts, args.max_new,
-                           temperature=args.temperature)
-        dt = time.time() - t0
+        if args.engine == "paged":
+            if cfg.opt_int8_kv:
+                # int8 paged KV pool is a ROADMAP follow-up; the other
+                # --optimized flags all apply
+                log.info("paged engine: disabling opt_int8_kv "
+                         "(not yet supported on the block pool)")
+                cfg = cfg.replace(opt_int8_kv=False)
+            eng = ContinuousEngine(
+                cfg, params, block_size=args.block_size,
+                num_blocks=args.num_blocks, max_batch=args.batch,
+                max_len=args.prompt_len + args.max_new)
+            handles = [eng.submit(p, args.max_new,
+                                  temperature=args.temperature)
+                       for p in prompts]
+            results = eng.run()
+            dt = time.time() - t0
+            rows = [results[h.req_id].tokens for h in handles]
+            log.info("pool peak=%d blocks (%.0f%% of %d), preemptions=%d",
+                     eng.metrics.peak_blocks,
+                     100.0 * eng.metrics.peak_blocks / args.num_blocks,
+                     args.num_blocks, eng.metrics.preemptions)
+        else:
+            eng = ServeEngine(cfg, params,
+                              max_len=args.prompt_len + args.max_new)
+            res = eng.generate(prompts, args.max_new,
+                               temperature=args.temperature)
+            dt = time.time() - t0
+            rows = [r.tolist() for r in res.tokens]
     toks = args.batch * args.max_new
-    log.info("%s: %d tokens in %.2fs (%.1f tok/s incl. compile)",
-             cfg.name, toks, dt, toks / dt)
-    for i, row in enumerate(res.tokens[:2]):
-        log.info("seq%d: %s", i, row.tolist())
+    log.info("%s[%s]: %d tokens in %.2fs (%.1f tok/s incl. compile)",
+             cfg.name, args.engine, toks, dt, toks / dt)
+    for i, row in enumerate(rows[:2]):
+        log.info("seq%d: %s", i, row)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,8 @@
-from repro.serve.engine import GenerateResult, ServeEngine
+from repro.serve.engine import (ContinuousEngine, EngineMetrics,
+                                GenerateResult, ServeEngine)
+from repro.serve.kv_pool import PagedKVCache, PoolExhausted
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["GenerateResult", "ServeEngine"]
+__all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
+           "ServeEngine", "PagedKVCache", "PoolExhausted", "Request",
+           "Scheduler"]

@@ -1,19 +1,38 @@
-"""Batched serving engine: prefill + decode with slot management.
+"""Serving engines: static-slot batching and continuous batching over a
+paged KV cache.
 
-``ServeEngine`` owns jitted prefill/decode closures and a KV-cache sized to
-(max_batch, max_len). ``generate`` serves a batch of prompts to completion
-(greedy or temperature sampling over the *softermax* distribution — the
-serve-time logits softmax also runs through the paper's base-2 form).
+Two engines share the model zoo and the softermax sampling head:
 
-Decoder-only LMs use this engine; whisper serving composes
-``whisper_prefill``/``whisper_decode_step`` directly (static cross-KV). A
-production scheduler would add paged KV blocks and per-slot admission on top
-of the same step functions.
+* ``ServeEngine`` — the original static-slot engine: one jitted prefill +
+  decode closure over a contiguous ``(max_batch, max_len)`` cache; a batch of
+  prompts runs to completion together. Every model family works here
+  (decoder-only LMs directly; whisper composes the step functions itself).
+  Kept as the general-purpose fallback and as the baseline the throughput
+  benchmark measures against.
+
+* ``ContinuousEngine`` — the production path for attention-family LMs:
+  per-request admission from a FIFO (``serve/scheduler.py``), KV in
+  fixed-size physical blocks from a shared pool (``serve/kv_pool.py``),
+  decode as ONE fused step over the whole running batch through per-request
+  block tables (``serve/paged_step.py`` → ``kernels/flash_decode_paged``).
+  Requests join the fused decode batch within the same step() as their
+  prefill and leave the moment they finish, returning their blocks to the
+  pool; when the pool runs dry the youngest request is preempted and
+  recomputed later. ``submit()``
+  enqueues, ``step()`` advances the world one iteration and reports freshly
+  decoded tokens per request (streaming), ``run()`` drives to completion and
+  returns per-request results plus throughput/latency metrics.
+
+Softermax is load-bearing in both: decode attention is the paper's
+Unnormed-Softmax-Unit recurrence (running IntMax + power-of-two rescales),
+which is what lets the paged engine visit cache blocks in table order with
+no pre-pass, and the serve-time logits softmax runs through the base-2 form.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +41,20 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.softermax import softmax_base2
 from repro.models.registry import model_fns
+from repro.serve.kv_pool import PagedKVCache
+from repro.serve.paged_step import (check_paged_support, paged_decode_step,
+                                    paged_prefill, scatter_prefill)
+from repro.serve.scheduler import Request, Scheduler
+
+
+def sample_tokens(lg: jax.Array, key, temperature: float,
+                  cfg: ModelConfig) -> jax.Array:
+    """Greedy or temperature sampling over the softermax distribution."""
+    lg = lg[:, :cfg.vocab_size]     # drop TP vocab padding
+    if temperature <= 0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    p = softmax_base2(lg / temperature, fold_log2e=True)
+    return jax.random.categorical(key, jnp.log(p + 1e-20)).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -31,6 +64,8 @@ class GenerateResult:
 
 
 class ServeEngine:
+    """Static-slot batch engine (see module docstring)."""
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
         self.cfg = cfg
         if cfg.opt_bf16_params:
@@ -48,12 +83,7 @@ class ServeEngine:
             static_argnames=())
 
     def _sample(self, lg: jax.Array, key, temperature: float) -> jax.Array:
-        # restrict to the real vocabulary (drop TP padding)
-        lg = lg[:, :self.cfg.vocab_size]
-        if temperature <= 0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        p = softmax_base2(lg / temperature, fold_log2e=True)
-        return jax.random.categorical(key, jnp.log(p + 1e-20)).astype(jnp.int32)
+        return sample_tokens(lg, key, temperature, self.cfg)
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  temperature: float = 0.0, seed: int = 0) -> GenerateResult:
@@ -71,3 +101,342 @@ class ServeEngine:
             out.append(tok)
         return GenerateResult(np.stack([np.asarray(t) for t in out], 1),
                               max_new)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged pool
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    steps: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    tokens_out: int = 0          # tokens sampled (includes later-discarded)
+    tokens_discarded: int = 0    # sampled but thrown away by preemption
+    wall_s: float = 0.0
+    peak_blocks: int = 0
+
+    @property
+    def tok_per_s(self) -> float:
+        """Delivered-token throughput (discarded work doesn't count)."""
+        kept = self.tokens_out - self.tokens_discarded
+        return kept / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class ContinuousEngine:
+    """Continuous batching + paged KV serving engine (attention LMs)."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 block_size: int = 16, num_blocks: int = 128,
+                 max_batch: int = 8, max_len: int = 512,
+                 max_admit_per_step: int = 2, seed: int = 0):
+        check_paged_support(cfg)
+        self.cfg = cfg
+        if cfg.opt_bf16_params:
+            from repro.models.lm import maybe_cast_params
+            params = maybe_cast_params(params, cfg)
+        self.params = params
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.max_admit_per_step = max_admit_per_step
+        self.pool = PagedKVCache(cfg, num_blocks, block_size)
+        self.sched = Scheduler(self.pool, max_batch, max_len)
+        self.nb_max = -(-max_len // block_size)
+        self.metrics = EngineMetrics()
+        self._key = jax.random.PRNGKey(seed)
+        # Decode batch rows are STABLE: a request keeps its row from
+        # admission to eviction, and vacated rows idle as harmless zombies
+        # (length 0, garbage block 0) until reused. That makes the sampled
+        # (B,) token vector of step N directly the input of step N+1 — no
+        # recomposition, no host sync in the decode loop. Token values are
+        # materialized lazily (drain).
+        self._rows: List[Optional[Request]] = [None] * max_batch
+        self._vec = jnp.zeros((max_batch,), jnp.int32)
+        self._pending: List = []     # [(device vector, [(req, epoch, row)])]
+
+        # greedy argmax is fused into both jitted steps so the common
+        # (temperature 0) path never materializes logits on the host
+        def _prefill_fn(p, t, lp):
+            lg, ks, vs = paged_prefill(p, t, lp, cfg)
+            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
+                lg, ks, vs
+
+        def _decode_fn(p, t, kp, vp, bt, ln):
+            lg, k, v = paged_decode_step(p, t, kp, vp, bt, ln, cfg)
+            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
+                lg, k, v
+
+        # On accelerators, donate the pools: they are rebound to the returned
+        # arrays every call, so the update aliases in-place instead of
+        # holding 2x pool memory. On CPU donation serializes dispatch and
+        # breaks the async decode pipeline (~4x slower steps) — skip it.
+        donate = jax.default_backend() != "cpu"
+        self._prefill = jax.jit(_prefill_fn)
+        self._scatter = jax.jit(scatter_prefill,
+                                donate_argnums=(0, 1) if donate else ())
+        self._decode = jax.jit(_decode_fn,
+                               donate_argnums=(2, 3) if donate else ())
+
+    # -- public API -------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               temperature: float = 0.0,
+               req_id: Optional[int] = None) -> Request:
+        """Enqueue one request; returns its (streaming) Request handle."""
+        return self.sched.submit(np.asarray(prompt, np.int32), max_new,
+                                 temperature, req_id)
+
+    def warmup(self) -> None:
+        """Take the greedy serving path's compiles out of serving latency:
+        jit shapes first (prefill/scatter per block-count bucket, decode per
+        table-width bucket; writes only into the reserved garbage block),
+        then a synthetic mini-workload through the real submit/step path so
+        the one-time eager-op compiles (token fetches, host→device
+        converts) happen now too. Temperature-sampled requests use eager
+        host-side sampling whose small one-time compiles are not covered.
+        Call once before serving traffic."""
+        if self.sched.has_work():
+            raise RuntimeError(
+                "warmup() must run before any requests are submitted "
+                "(its synthetic workload would consume and discard them)")
+        zeros = jnp.zeros
+        for nb in range(1, self.nb_max + 1):
+            Sp = nb * self.block_size
+            _, _, ks, vs = self._prefill(
+                self.params, zeros((1, Sp), jnp.int32),
+                jnp.asarray([Sp - 1], jnp.int32))
+            self.pool.k, self.pool.v = self._scatter(
+                self.pool.k, self.pool.v, ks, vs, zeros((nb,), jnp.int32))
+        w = 1
+        while True:
+            w = min(w, self.nb_max)
+            _, _, self.pool.k, self.pool.v = self._decode(
+                self.params, zeros((self.max_batch,), jnp.int32),
+                self.pool.k, self.pool.v,
+                zeros((self.max_batch, w), jnp.int32),
+                zeros((self.max_batch,), jnp.int32))
+            if w == self.nb_max:
+                break
+            w *= 2
+
+        bs = self.block_size
+        for nb in range(1, self.nb_max + 1):
+            plen = (nb - 1) * bs + 1
+            try:
+                self.submit(np.ones((plen,), np.int32), 2)
+            except ValueError:
+                break                      # trajectory exceeds max_len/pool
+        while self.sched.has_work():
+            self.step()
+        self.drain()
+        self.sched.finished.clear()
+        self.metrics = EngineMetrics()
+        # the synthetic workload's allocations shouldn't show up in the
+        # serving stats (notably peak_in_use → metrics.peak_blocks)
+        from repro.serve.kv_pool import PoolStats
+        self.pool.stats = PoolStats(self.pool.num_blocks, 0, 0, 0, 0)
+
+    def step(self) -> Dict[int, List[int]]:
+        """Advance the world one iteration: admit+prefill, join, one fused
+        decode step, evict. Returns {req_id: fresh tokens} for streaming."""
+        t0 = time.time()
+        events: Dict[int, List[int]] = {}
+        self._sync_rows()
+
+        admitted = self.sched.admit(self.max_admit_per_step)
+        for req in admitted:
+            self._do_prefill(req, events)
+        self.sched.evict_finished()              # max_new == 1 requests
+
+        before_discard = self.sched.tokens_discarded
+        preempted = self.sched.ensure_decode_blocks()
+        self.metrics.preemptions += len(preempted)
+        self.metrics.tokens_discarded += \
+            self.sched.tokens_discarded - before_discard
+        self._sync_rows()
+        if self.sched.running:
+            self._do_decode_step(events)
+            self.sched.evict_finished()
+
+        self.metrics.steps += 1
+        self.metrics.wall_s += time.time() - t0
+        self.metrics.peak_blocks = self.pool.stats.peak_in_use
+        return events
+
+    def _sync_rows(self) -> None:
+        """Vacate rows whose request left the running set (finished or
+        preempted); the row idles as a zombie until reassigned."""
+        live = {id(r) for r in self.sched.running}
+        for i, r in enumerate(self._rows):
+            if r is not None and id(r) not in live:
+                self._rows[i] = None
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Materialize every in-flight sampled-token vector into its
+        request's ``tokens`` list. Returns {req_id: fresh tokens}."""
+        events: Dict[int, List[int]] = {}
+        for vec, rows in self._pending:
+            arr = np.asarray(vec)
+            for req, epoch, row in rows:
+                if req.epoch == epoch:           # not preempted since
+                    tok = int(arr[row])
+                    req.tokens.append(tok)
+                    events.setdefault(req.req_id, []).append(tok)
+        self._pending.clear()
+        return events
+
+    def run(self, on_token: Optional[Callable[[int, List[int]], None]] = None
+            ) -> Dict[int, Request]:
+        """Drive until every submitted request has finished. With an
+        ``on_token`` callback, tokens are drained (synced) every step for
+        low-latency streaming; without one the pipeline stays async (host
+        syncs only for temperature sampling) and drains once at the end.
+        In-flight vectors are (max_batch,) int32 — negligible to hold.
+        ``metrics.wall_s`` is set to the true wall time of the drive,
+        including the final drain (step() alone accumulates only host
+        dispatch time, which understates async greedy work)."""
+        t0 = time.time()
+        w0 = self.metrics.wall_s     # replace this run's per-step dispatch
+        #                              times with its true wall time, while
+        #                              staying cumulative across runs
+        while self.sched.has_work():
+            events = self.step()
+            if on_token:
+                for rid, toks in self.drain().items():
+                    events.setdefault(rid, []).extend(toks)
+                for rid, toks in events.items():
+                    on_token(rid, toks)
+        self.drain()
+        self.metrics.wall_s = w0 + (time.time() - t0)
+        return self.pop_finished()
+
+    def pop_finished(self) -> Dict[int, Request]:
+        """Return-and-clear the finished set. Keeps a long-lived engine from
+        accumulating every completed Request, and keeps consecutive run()
+        calls from re-reporting earlier runs' results."""
+        done = dict(self.sched.finished)
+        self.sched.finished.clear()
+        return done
+
+    # -- internals --------------------------------------------------------
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _do_prefill(self, req: Request, events: Dict[int, List[int]]) -> None:
+        bs = self.block_size
+        plen = req.prompt_len
+        Sp = -(-plen // bs) * bs
+        tokens = np.zeros((1, Sp), np.int32)
+        tokens[0, :plen] = req.prompt
+        greedy, lg, ks, vs = self._prefill(self.params, jnp.asarray(tokens),
+                                           jnp.asarray([plen - 1], jnp.int32))
+        blocks = jnp.asarray(self.pool.blocks_of(req.req_id), jnp.int32)
+        self.pool.k, self.pool.v = self._scatter(self.pool.k, self.pool.v,
+                                                 ks, vs, blocks)
+        B = self.max_batch
+        row = self._rows.index(None)     # guaranteed: running < max_batch
+        self._rows[row] = req
+        mask = np.zeros((B,), bool)
+        mask[row] = True
+        if req.temperature <= 0:
+            # stays on device; materialized at the next drain
+            self._pending.append((greedy, [(req, req.epoch, 0)]))
+            self._vec = jnp.where(jnp.asarray(mask),
+                                  jnp.broadcast_to(greedy, (B,)), self._vec)
+        else:
+            tok = int(sample_tokens(lg, self._next_key(), req.temperature,
+                                    self.cfg)[0])
+            req.tokens.append(tok)
+            self._vec = jnp.where(jnp.asarray(mask),
+                                  jnp.asarray(np.full((B,), tok, np.int32)),
+                                  self._vec)
+            events.setdefault(req.req_id, []).append(tok)
+        req.n_generated = 1
+        req.state = "decoding"
+        # Dispatch-time stamp: exact when streaming (per-step drain keeps
+        # the pipeline ≤1 step deep); optimistic by the pipeline depth for a
+        # pure-async run() — t_finish (eviction) has the same convention,
+        # so latencies stay internally consistent.
+        req.t_first_token = time.time()
+        self.metrics.prefills += 1
+        self.metrics.tokens_out += 1
+
+    def _table_width(self, occ) -> int:
+        """Decode block-table width: next power of two covering the longest
+        running request (few jit buckets instead of always nb_max)."""
+        need = max(self.pool.n_blocks_of(r.req_id) for _, r in occ)
+        w = 1
+        while w < need:
+            w *= 2
+        return min(w, self.nb_max)
+
+    def _do_decode_step(self, events: Dict[int, List[int]]) -> None:
+        B = self.max_batch
+        occ = [(i, r) for i, r in enumerate(self._rows) if r is not None]
+        greedy_only = all(r.temperature <= 0 for _, r in occ)
+
+        if greedy_only:
+            tokens1 = self._vec          # previous step's vector, on device
+        else:
+            for rid, toks in self.drain().items():
+                events.setdefault(rid, []).extend(toks)
+            t1 = np.zeros((B,), np.int32)
+            for i, req in occ:
+                t1[i] = req.tokens[-1]
+            tokens1 = jnp.asarray(t1)
+
+        lengths = np.zeros((B,), np.int32)
+        for i, req in occ:
+            lengths[i] = req.n_cached
+        w = self._table_width(occ)
+        bt = np.zeros((B, w), np.int32)
+        bt[[i for i, _ in occ]] = self.pool.table_array(
+            [r.req_id for _, r in occ], w)
+
+        greedy, lg, self.pool.k, self.pool.v = self._decode(
+            self.params, tokens1, self.pool.k, self.pool.v,
+            jnp.asarray(bt), jnp.asarray(lengths))
+
+        if greedy_only:
+            # async: token values stay on device until drained; bookkeeping
+            # (finish, block growth) is purely count-based
+            self._vec = greedy
+            self._pending.append(
+                (greedy, [(r, r.epoch, i) for i, r in occ]))
+            for _, req in occ:
+                req.n_generated += 1
+                req.n_cached += 1
+        else:
+            toks = self._sample_rows(lg, [
+                self._rows[i].temperature if self._rows[i] else 0.0
+                for i in range(B)], greedy)
+            for i, req in occ:
+                tok = int(toks[i])
+                req.tokens.append(tok)
+                req.n_generated += 1
+                req.n_cached += 1
+                events.setdefault(req.req_id, []).append(tok)
+            self._vec = jnp.asarray(toks)
+        self.metrics.decode_steps += 1
+        self.metrics.tokens_out += len(occ)
+
+    def _sample_rows(self, lg: jax.Array, temps: List[float],
+                     greedy_dev: Optional[jax.Array] = None) -> np.ndarray:
+        """Per-row sampling; reuses the jit-fused argmax when provided."""
+        lg = lg[:len(temps), :self.cfg.vocab_size]
+        greedy = np.asarray(greedy_dev[:len(temps)] if greedy_dev is not None
+                            else jnp.argmax(lg, axis=-1), np.int32)
+        if all(t <= 0 for t in temps):
+            return greedy
+        tv = jnp.asarray([max(t, 1e-6) for t in temps], jnp.float32)
+        p = softmax_base2(lg / tv[:, None], fold_log2e=True)
+        samp = np.asarray(
+            jax.random.categorical(self._next_key(), jnp.log(p + 1e-20)),
+            np.int32)
+        return np.where(np.asarray(temps) > 0, samp, greedy)

@@ -1,0 +1,124 @@
+"""Paged KV cache: a fixed pool of physical blocks + per-request block tables.
+
+The pool owns two device arrays shaped ``(L, num_blocks, Hkv, block_size,
+Dh)`` (layer-major inside each block, so one physical block holds a token
+span for *every* layer and the per-request block table is shared across the
+layer scan). Block 0 is reserved as the garbage block: padding rows of the
+decode batch and padded block-table tails point at it, so scatter writes from
+inactive batch slots land somewhere harmless.
+
+Allocation metadata (free list, per-request block lists) is plain host-side
+Python — the scheduler calls ``alloc``/``append_block``/``free`` between
+device steps; the jitted steps only ever see the padded int32 block tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class PoolExhausted(Exception):
+    """Raised when an allocation cannot be satisfied; triggers preemption."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    num_blocks: int          # usable blocks (excludes the garbage block)
+    blocks_in_use: int
+    peak_in_use: int
+    allocs: int
+    frees: int
+
+    @property
+    def utilization(self) -> float:
+        return self.blocks_in_use / max(self.num_blocks, 1)
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+        from repro.serve.paged_step import check_paged_support
+        check_paged_support(cfg)     # one rule set with the model steps
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        L = cfg.n_layers
+        Hkv, Dh = cfg.n_kv_heads, cfg.head_dim_
+        dt = cfg.compute_dtype_
+        # +1: block 0 is the reserved garbage block, never allocated.
+        shape = (L, num_blocks + 1, Hkv, block_size, Dh)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self._free: List[int] = list(range(1, num_blocks + 1))
+        self._tables: Dict[int, List[int]] = {}
+        self.stats = PoolStats(num_blocks, 0, 0, 0, 0)
+
+    # -- allocation -------------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, req_id: int, n: int) -> List[int]:
+        """Allocate ``n`` blocks for a new request."""
+        if req_id in self._tables:
+            raise ValueError(f"request {req_id} already has blocks")
+        if n > len(self._free):
+            raise PoolExhausted(f"need {n} blocks, {len(self._free)} free")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._tables[req_id] = blocks
+        self._account(n)
+        return blocks
+
+    def append_block(self, req_id: int) -> int:
+        """Grow a request's table by one block (decode crossed a boundary)."""
+        if not self._free:
+            raise PoolExhausted("no free blocks")
+        b = self._free.pop()
+        self._tables[req_id].append(b)
+        self._account(1)
+        return b
+
+    def free(self, req_id: int) -> int:
+        """Return a finished/preempted request's blocks. Returns the count."""
+        blocks = self._tables.pop(req_id, [])
+        self._free.extend(blocks)
+        self.stats.blocks_in_use -= len(blocks)
+        self.stats.frees += len(blocks)
+        return len(blocks)
+
+    def _account(self, n: int) -> None:
+        self.stats.blocks_in_use += n
+        self.stats.allocs += n
+        self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                     self.stats.blocks_in_use)
+
+    # -- views ------------------------------------------------------------
+
+    def blocks_of(self, req_id: int) -> List[int]:
+        return self._tables[req_id]
+
+    def n_blocks_of(self, req_id: int) -> int:
+        return len(self._tables.get(req_id, ()))
+
+    def table_array(self, req_ids: Sequence[int], width: int) -> np.ndarray:
+        """Padded (len(req_ids), width) int32 block table; pad = block 0."""
+        out = np.zeros((len(req_ids), width), np.int32)
+        for i, rid in enumerate(req_ids):
+            blocks = self._tables.get(rid, ())
+            out[i, :len(blocks)] = blocks
+        return out
+
+    @property
+    def utilization(self) -> float:
+        return self.stats.utilization

@@ -1,0 +1,198 @@
+"""Model step functions over the paged KV cache (attention-family LMs).
+
+These mirror ``models/lm.py``'s prefill/decode pair but speak the block-pool
+layout instead of a contiguous per-request cache:
+
+* ``paged_prefill``     — full-prompt forward (prompts right-padded to a
+  block multiple; causality keeps pad junk out of the real tokens) returning
+  the true-last-token logits plus the per-layer K/V to scatter into the pool.
+* ``scatter_prefill``   — place a prefilled request's K/V into its allocated
+  physical blocks (one fused device scatter).
+* ``paged_decode_step`` — one token for the whole running batch: per layer,
+  write the new K/V row through the block table, then run paged Softermax
+  decode attention over the pool. Inactive batch slots carry block table 0
+  (the pool's garbage block) and length 0, so their writes and reads are
+  harmless and their logits are ignored by the engine.
+
+Attention math is identical to the contiguous path (same Unnormed-Softmax-
+Unit recurrence): on TPU / under ``cfg.interpret_kernels`` the Pallas
+``flash_decode_paged`` kernel runs; elsewhere a pure-JAX gather fallback
+keeps CPU tests fast.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_decode_paged import (flash_decode_paged,
+                                              paged_decode_ref)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import embed, logits, mlp, rmsnorm, rope
+from repro.models.lm import maybe_cast_params
+from repro.parallel.sharding import shard_act
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """Paged serving covers the GQA attention families; everything else
+    stays on the static engine."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged serving: unsupported family {cfg.family!r}")
+    if cfg.mla is not None or cfg.ssm is not None:
+        raise ValueError("paged serving: MLA/SSM caches not supported")
+    if cfg.moe.first_dense:
+        raise ValueError("paged serving: leading dense head blocks "
+                         "not supported")
+    if cfg.window:
+        raise ValueError("paged serving: sliding-window archs not supported")
+    if cfg.opt_int8_kv:
+        raise ValueError("paged serving: int8 KV pool not implemented "
+                         "(ROADMAP follow-up)")
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def paged_prefill(
+    params,
+    tokens: jax.Array,       # (B, Sp) prompts right-padded to a block multiple
+    last_pos: jax.Array,     # (B,) int32 index of the true last prompt token
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (true-last-token logits (B, V), k, v (L, B, Hkv, Sp, Dh))."""
+    B, Sp = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    positions = jnp.broadcast_to(jnp.arange(Sp, dtype=jnp.int32), (B, Sp))
+    x = embed(params["embed"], tokens, cfg)
+
+    def body(x, bp):
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        y, k, v = attn_mod.attention_apply(
+            bp["mixer"], h, cfg, positions=positions, causal=True,
+            return_kv=True)
+        x = x + y
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        x = shard_act(x + f, ("batch", "seq", "act_embed"))
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x_last = jnp.take_along_axis(
+        x, last_pos[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, d)
+    lg = logits(params["embed"], x_last, cfg)[:, 0]
+    return lg, ks, vs
+
+
+def scatter_prefill(
+    k_pool: jax.Array,       # (L, N, Hkv, BS, Dh)
+    v_pool: jax.Array,
+    ks: jax.Array,           # (L, 1, Hkv, Sp, Dh) from paged_prefill (B=1)
+    vs: jax.Array,
+    block_ids: jax.Array,    # (nb,) int32 physical blocks, nb*BS == Sp
+) -> Tuple[jax.Array, jax.Array]:
+    L, _, Hkv, Sp, Dh = ks.shape
+    BS = k_pool.shape[3]
+    nb = Sp // BS
+
+    def place(pool, seq):
+        blocks = seq[:, 0].reshape(L, Hkv, nb, BS, Dh)
+        blocks = jnp.moveaxis(blocks, 2, 1)          # (L, nb, Hkv, BS, Dh)
+        return pool.at[:, block_ids].set(blocks.astype(pool.dtype))
+
+    return place(k_pool, ks), place(v_pool, vs)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _paged_attention(q, k_pool_l, v_pool_l, block_tables, new_len, cfg,
+                     intmax):
+    if cfg.interpret_kernels:
+        return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
+                                  new_len, intmax=intmax, interpret=True)
+    if jax.default_backend() == "tpu":
+        return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
+                                  new_len, intmax=intmax)
+    return paged_decode_ref(q, k_pool_l, v_pool_l, block_tables, new_len,
+                            intmax=intmax)
+
+
+def paged_decode_step(
+    params,
+    tokens1: jax.Array,       # (B,) current token ids
+    k_pool: jax.Array,        # (L, N, Hkv, BS, Dh)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) tokens already in cache
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One continuous-batch decode step.
+
+    Writes each sequence's new K/V row at logical position ``lengths[b]``
+    (physical: table[b, pos // BS] offset pos % BS), attends over
+    ``lengths + 1`` entries, and returns (logits (B, V), new pools). The
+    caller advances its host-side lengths by one afterwards.
+    """
+    params = maybe_cast_params(params, cfg)
+    B = tokens1.shape[0]
+    BS = k_pool.shape[3]
+    Hkv = cfg.n_kv_heads
+    dt = cfg.compute_dtype_
+    dh = cfg.head_dim_
+    premult, intmax = attn_mod._mode(cfg)
+
+    table = params["embed"]["embedding"].astype(dt)
+    x1 = shard_act(table[tokens1], ("batch", "act_embed"))
+
+    blk = jnp.take_along_axis(block_tables, (lengths // BS)[:, None],
+                              axis=1)[:, 0]           # (B,) physical block
+    off = lengths % BS
+    new_len = lengths + 1
+    h_idx = jnp.arange(Hkv)
+
+    def body(x1, xs):
+        bp, kp_l, vp_l = xs
+        h = rmsnorm(bp["ln1"], x1, cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, bp["mixer"]["wq"].astype(dt))
+        k = jnp.einsum("bd,dhk->bhk", h, bp["mixer"]["wk"].astype(dt))
+        v = jnp.einsum("bd,dhk->bhk", h, bp["mixer"]["wv"].astype(dt))
+        if cfg.qk_norm:
+            q = rmsnorm(bp["mixer"]["q_norm"], q, cfg.norm_eps)
+            k = rmsnorm(bp["mixer"]["k_norm"], k, cfg.norm_eps)
+        if cfg.rope_theta > 0:
+            pos = lengths[:, None]                    # (B, 1): next position
+            q = rope(q[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
+            k = rope(k[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
+        kp_l = kp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
+            k.astype(kp_l.dtype))
+        vp_l = vp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
+            v.astype(vp_l.dtype))
+        q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+        o = _paged_attention(q, kp_l, vp_l, block_tables, new_len, cfg,
+                             intmax)
+        y = jnp.einsum("bhk,hkd->bd", o, bp["mixer"]["wo"].astype(dt))
+        x1 = x1 + y
+        h2 = rmsnorm(bp["ln2"], x1, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2[:, None, :], cfg)
+            f = f[:, 0]
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        return x1 + f, (kp_l, vp_l)
+
+    x1, (new_k, new_v) = jax.lax.scan(body, x1, (params["blocks"],
+                                                 k_pool, v_pool))
+    x1 = rmsnorm(params["final_norm"], x1, cfg.norm_eps)
+    lg = logits(params["embed"], x1[:, None, :], cfg)[:, 0]
+    return lg, new_k, new_v

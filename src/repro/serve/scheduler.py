@@ -1,0 +1,215 @@
+"""Continuous-batching scheduler: FIFO admission, join, eviction, preemption.
+
+Request lifecycle (see serve/README.md):
+
+    QUEUED --admit--> PREFILL --join--> DECODING --evict--> FINISHED
+                          ^                 |
+                          '---- preempt ----'
+
+``admit`` pops the FIFO while the pool can hold the prompt's blocks and a
+decode slot is free; admitted requests prefill and join the running batch at
+the *next* step boundary (continuous batching — no waiting for the batch to
+drain). ``ensure_decode_blocks`` grows tables when a sequence crosses a block
+boundary; if the pool is exhausted it preempts the *youngest* running request
+(recompute-on-readmit policy: its blocks are freed, its generated tokens are
+discarded, and it rejoins the head of the queue), guaranteeing the oldest
+requests always make progress.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.kv_pool import PagedKVCache, PoolExhausted
+
+QUEUED, PREFILL, DECODING, FINISHED = "queued", "prefill", "decoding", \
+    "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int
+    temperature: float = 0.0
+    state: str = QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    n_generated: int = 0             # tokens sampled (≥ len(tokens): the
+                                     # engine materializes values lazily)
+    n_cached: int = 0                # tokens resident in the paged cache
+    epoch: int = 0                   # bumped on preemption: stale in-flight
+                                     # token vectors are discarded by epoch
+    n_preemptions: int = 0
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_submit
+
+
+class Scheduler:
+    """Owns the admission queue and the running set; mutates pool metadata.
+
+    The engine calls, per step: ``admit()`` → prefill the returned requests →
+    ``ensure_decode_blocks()`` → run the fused decode step over
+    ``running``.
+    """
+
+    def __init__(self, pool: PagedKVCache, max_batch: int,
+                 max_len: int):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_id = 0
+        self._reserved: Dict[int, int] = {}   # future growth blocks held
+        self.n_preemptions = 0
+        self.tokens_discarded = 0     # generated tokens thrown away by
+        #                               preemption (recomputed on readmit)
+
+    def _outstanding(self) -> int:
+        return sum(self._reserved.values())
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               temperature: float = 0.0,
+               req_id: Optional[int] = None) -> Request:
+        rid = req_id if req_id is not None else self._next_id
+        if isinstance(rid, int):
+            self._next_id = max(self._next_id, rid + 1)  # no auto collision
+        if max_new < 1:
+            raise ValueError(f"request {rid}: max_new must be >= 1")
+        if prompt.shape[0] < 1:
+            raise ValueError(f"request {rid}: empty prompt")
+        if rid in self.finished or \
+                any(r.req_id == rid for r in self.waiting) or \
+                any(r.req_id == rid for r in self.running):
+            raise ValueError(f"request id {rid} already in use")
+        if prompt.shape[0] + max_new > self.max_len:
+            raise ValueError(
+                f"request {rid}: prompt {prompt.shape[0]} + max_new "
+                f"{max_new} exceeds engine max_len {self.max_len}")
+        total = self.pool.blocks_for(prompt.shape[0] + max_new - 1)
+        if total > self.pool.num_blocks:
+            raise ValueError(
+                f"request {rid}: trajectory needs {total} blocks but the "
+                f"pool only has {self.pool.num_blocks} — raise num_blocks")
+        req = Request(rid, np.asarray(prompt, np.int32), max_new,
+                      temperature, t_submit=time.time())
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- admission --------------------------------------------------------
+
+    def admit(self, max_n: Optional[int] = None) -> List[Request]:
+        """FIFO admission: pop while a slot is free and the pool can hold the
+        request's whole trajectory (prompt blocks now + reserved growth for
+        its max_new decode tokens). Reserving the trajectory keeps admission
+        from over-committing the pool, so preemption is a safety net rather
+        than the steady state. ``max_n`` caps admissions per call so prefill
+        bursts interleave with decode steps instead of stalling them."""
+        admitted: List[Request] = []
+        while self.waiting and len(self.running) < self.max_batch and \
+                (max_n is None or len(admitted) < max_n):
+            nxt = self.waiting[0]
+            need = self.pool.blocks_for(nxt.prompt_len)
+            total = max(need, self.pool.blocks_for(
+                nxt.prompt_len + nxt.max_new - 1))
+            if self.pool.num_free - self._outstanding() < total:
+                break        # strict FIFO: don't let short requests overtake
+            self.waiting.popleft()
+            self.pool.alloc(nxt.req_id, need)
+            self._reserved[nxt.req_id] = total - need
+            nxt.state = PREFILL
+            nxt.n_cached = nxt.prompt_len
+            admitted.append(nxt)
+            self.running.append(nxt)
+        return admitted
+
+    # -- decode-time block growth / preemption ----------------------------
+
+    def ensure_decode_blocks(self) -> List[Request]:
+        """Grow block tables for sequences at a block boundary, preempting
+        the youngest running requests when the pool runs dry. Returns the
+        requests preempted this step."""
+        preempted: List[Request] = []
+        for req in list(self.running):   # admission order = oldest first
+            if req not in self.running:
+                continue                 # already preempted below
+            bs = self.pool.block_size
+            if req.n_cached % bs != 0:
+                continue                 # room in the last block
+            while True:
+                try:
+                    self.pool.append_block(req.req_id)
+                    held = self._reserved.get(req.req_id, 0)
+                    if held:
+                        self._reserved[req.req_id] = held - 1
+                    break
+                except PoolExhausted:
+                    if len(self.running) == 1:
+                        raise RuntimeError(
+                            "pool exhausted and nothing to preempt: "
+                            "num_blocks too small for a single request")
+                    victim = self.running[-1]   # youngest — may be req
+                    self._preempt(victim)
+                    preempted.append(victim)
+                    if victim is req:
+                        break            # req itself went back to the queue
+        return preempted
+
+    def _preempt(self, req: Request) -> None:
+        """Recompute-on-readmit: the request's generated tokens are
+        discarded and its stream restarts from the first token after it is
+        readmitted (identical for greedy; may differ for sampled requests).
+        Streaming consumers observe the restart; a stream-reset event is a
+        follow-up for the features that make preemption reachable."""
+        self.pool.free(req.req_id)
+        self._reserved.pop(req.req_id, None)
+        self.running.remove(req)
+        req.state = QUEUED
+        self.tokens_discarded += req.n_generated
+        req.tokens = []                         # recompute on readmission
+        req.n_generated = 0
+        req.n_cached = 0
+        req.epoch += 1
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(req)
+
+    # -- completion -------------------------------------------------------
+
+    def evict_finished(self) -> List[Request]:
+        done = [r for r in self.running if r.done]
+        for req in done:
+            self.pool.free(req.req_id)
+            self._reserved.pop(req.req_id, None)
+            self.running.remove(req)
+            req.state = FINISHED
+            req.t_finish = time.time()
+            self.finished[req.req_id] = req
+        return done

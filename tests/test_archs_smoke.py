@@ -12,6 +12,8 @@ from repro.models.registry import (ARCH_IDS, GRID_ARCHS, get_config,
 from repro.optim import adamw
 from repro.train import make_train_step
 
+pytestmark = pytest.mark.slow    # full arch sweep: minutes of CPU compiles
+
 B, S = 2, 32
 
 

@@ -27,6 +27,7 @@ def small_setup():
     return cfg, fns, params
 
 
+@pytest.mark.slow
 class TestTrainLoop:
     def test_loss_decreases(self, small_setup):
         cfg, fns, params = small_setup
@@ -70,6 +71,7 @@ class TestTrainLoop:
             train(train_step=bad_step, params=params, data=data, tc=tc)
 
 
+@pytest.mark.slow
 class TestCheckpointing:
     def test_roundtrip_and_retention(self, small_setup):
         cfg, fns, params = small_setup
