@@ -42,6 +42,10 @@ def main() -> None:
     from benchmarks import serve_throughput
     serve_throughput.main(["--fast"] if args.fast else [])
 
+    print("# Prefix cache — radix-tree prompt reuse on the paged pool")
+    from benchmarks import prefix_cache_bench
+    prefix_cache_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

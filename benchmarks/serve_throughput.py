@@ -59,9 +59,13 @@ def make_paged_driver(cfg, params, workload, *, block_size, num_blocks,
                       max_batch, max_len, max_new):
     """Returns drive() -> (tok_s, metrics) on one warmed engine."""
     from repro.serve import ContinuousEngine, EngineMetrics
+    # prefix cache OFF: the repeats replay identical prompts, and a warm
+    # radix tree would let the paged engine skip prefills the static engine
+    # must run — this benchmark isolates the paged-vs-static structural win;
+    # prefix reuse has its own benchmark (prefix_cache_bench.py)
     eng = ContinuousEngine(cfg, params, block_size=block_size,
                            num_blocks=num_blocks, max_batch=max_batch,
-                           max_len=max_len)
+                           max_len=max_len, prefix_cache=False)
     eng.warmup()                                   # compile all jit buckets
 
     def drive():

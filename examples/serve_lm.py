@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=64)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-tree prompt-prefix reuse")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by every request "
+                         "(exercises the prefix cache)")
     args = ap.parse_args()
 
     import jax
@@ -37,14 +42,18 @@ def main():
     eng = ContinuousEngine(
         cfg, params, block_size=args.block_size,
         num_blocks=args.num_blocks, max_batch=args.requests,
-        max_len=args.prompt_len + args.max_new)
+        max_len=args.shared_prefix + args.prompt_len + args.max_new,
+        prefix_cache=not args.no_prefix_cache)
 
     rng = np.random.default_rng(0)
     # mixed lengths: the whole point of per-request paged admission
     lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
                         args.requests)
+    system = rng.integers(1, cfg.vocab_size, (args.shared_prefix,))
     handles = [eng.submit(
-        rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32),
+        np.concatenate([system,
+                        rng.integers(1, cfg.vocab_size, (n,))]
+                       ).astype(np.int32),
         args.max_new, temperature=args.temperature) for n in lens]
 
     t0 = time.time()
@@ -59,6 +68,14 @@ def main():
           f"({m.tokens_out / dt:.1f} tok/s incl. prefill+compile); "
           f"peak pool use {m.peak_blocks}/{args.num_blocks} blocks, "
           f"{m.preemptions} preemptions")
+    if eng.prefix_cache is not None:
+        cs = eng.prefix_cache.stats
+        print(f"prefix cache: {cs.hit_tokens}/{cs.lookup_tokens} prompt "
+              f"tokens reused ({100 * cs.hit_rate:.0f}%), prefill savings "
+              f"{m.prefill_savings:.2f}x, shared-block peak "
+              f"{m.shared_blocks_peak}, {m.cow_copies} COW copies, "
+              f"{cs.evictions} evictions, "
+              f"{eng.prefix_cache.cached_blocks} blocks cached at exit")
     for h in handles[:2]:
         r = results[h.req_id]
         print(f"req{h.req_id} (ttft {r.ttft * 1e3:.0f}ms): {r.tokens}")

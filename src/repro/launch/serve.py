@@ -38,6 +38,13 @@ def main() -> None:
                     help="paged engine: tokens per physical KV block")
     ap.add_argument("--num-blocks", type=int, default=128,
                     help="paged engine: physical blocks in the pool")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged engine: radix-tree prompt-prefix reuse on "
+                         "the block pool (--no-prefix-cache disables)")
+    ap.add_argument("--evict-policy", choices=("lru", "fifo"), default="lru",
+                    help="prefix cache: order in which unreferenced cached "
+                         "blocks are reclaimed")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -65,7 +72,9 @@ def main() -> None:
             eng = ContinuousEngine(
                 cfg, params, block_size=args.block_size,
                 num_blocks=args.num_blocks, max_batch=args.batch,
-                max_len=args.prompt_len + args.max_new)
+                max_len=args.prompt_len + args.max_new,
+                prefix_cache=args.prefix_cache,
+                evict_policy=args.evict_policy)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
                        for p in prompts]
@@ -76,6 +85,16 @@ def main() -> None:
                      eng.metrics.peak_blocks,
                      100.0 * eng.metrics.peak_blocks / args.num_blocks,
                      args.num_blocks, eng.metrics.preemptions)
+            if eng.prefix_cache is not None:
+                cs = eng.prefix_cache.stats
+                log.info("prefix cache[%s]: hit %d/%d prompt tokens "
+                         "(%.0f%%), %d shared-block peak, %d COW, "
+                         "%d evictions, prefill savings %.2fx",
+                         args.evict_policy, cs.hit_tokens, cs.lookup_tokens,
+                         100.0 * cs.hit_rate,
+                         eng.metrics.shared_blocks_peak,
+                         eng.metrics.cow_copies, cs.evictions,
+                         eng.metrics.prefill_savings)
         else:
             eng = ServeEngine(cfg, params,
                               max_len=args.prompt_len + args.max_new)

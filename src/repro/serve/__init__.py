@@ -1,8 +1,9 @@
 from repro.serve.engine import (ContinuousEngine, EngineMetrics,
                                 GenerateResult, ServeEngine)
-from repro.serve.kv_pool import PagedKVCache, PoolExhausted
+from repro.serve.kv_pool import PagedKVCache, PoolExhausted, PoolStats
+from repro.serve.radix_cache import CacheStats, RadixCache
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
-           "ServeEngine", "PagedKVCache", "PoolExhausted", "Request",
-           "Scheduler"]
+           "ServeEngine", "PagedKVCache", "PoolExhausted", "PoolStats",
+           "RadixCache", "CacheStats", "Request", "Scheduler"]

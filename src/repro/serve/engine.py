@@ -17,8 +17,13 @@ Two engines share the model zoo and the softermax sampling head:
   block tables (``serve/paged_step.py`` → ``kernels/flash_decode_paged``).
   Requests join the fused decode batch within the same step() as their
   prefill and leave the moment they finish, returning their blocks to the
-  pool; when the pool runs dry the youngest request is preempted and
-  recomputed later. ``submit()``
+  pool; when the pool runs dry, unreferenced prefix-cache blocks are evicted
+  first and only then is the youngest request preempted and recomputed
+  later. A radix-tree prefix cache (``serve/radix_cache.py``, on by
+  default) shares prompt-prefix KV blocks between requests: admission
+  charges only the uncached suffix, prefill runs offset-aware from the
+  first uncached token, and finished requests release their prompt blocks
+  back to the tree. ``submit()``
   enqueues, ``step()`` advances the world one iteration and reports freshly
   decoded tokens per request (streaming), ``run()`` drives to completion and
   returns per-request results plus throughput/latency metrics.
@@ -43,7 +48,9 @@ from repro.core.softermax import softmax_base2
 from repro.models.registry import model_fns
 from repro.serve.kv_pool import PagedKVCache
 from repro.serve.paged_step import (check_paged_support, paged_decode_step,
-                                    paged_prefill, scatter_prefill)
+                                    paged_prefill, paged_prefill_suffix,
+                                    scatter_prefill, scatter_prefill_offset)
+from repro.serve.radix_cache import RadixCache
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -118,12 +125,25 @@ class EngineMetrics:
     tokens_discarded: int = 0    # sampled but thrown away by preemption
     wall_s: float = 0.0
     peak_blocks: int = 0
+    # prefix-cache counters (zero when the cache is disabled)
+    prefill_tokens: int = 0      # prompt tokens actually run through prefill
+    prefix_hit_tokens: int = 0   # prompt tokens reused from the radix tree
+    cache_evictions: int = 0     # blocks evicted from the tree
+    cow_copies: int = 0          # partial tail blocks copied on write
+    shared_blocks_peak: int = 0  # peak blocks referenced by >1 owner
 
     @property
     def tok_per_s(self) -> float:
         """Delivered-token throughput (discarded work doesn't count)."""
         kept = self.tokens_out - self.tokens_discarded
         return kept / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def prefill_savings(self) -> float:
+        """Ratio of prompt tokens submitted to prompt tokens computed —
+        the prefix cache's prefill-work reduction (1.0 = no reuse)."""
+        total = self.prefill_tokens + self.prefix_hit_tokens
+        return total / max(self.prefill_tokens, 1)
 
 
 class ContinuousEngine:
@@ -132,7 +152,8 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  block_size: int = 16, num_blocks: int = 128,
                  max_batch: int = 8, max_len: int = 512,
-                 max_admit_per_step: int = 2, seed: int = 0):
+                 max_admit_per_step: int = 2, seed: int = 0,
+                 prefix_cache: bool = True, evict_policy: str = "lru"):
         check_paged_support(cfg)
         self.cfg = cfg
         if cfg.opt_bf16_params:
@@ -144,7 +165,10 @@ class ContinuousEngine:
         self.max_len = max_len
         self.max_admit_per_step = max_admit_per_step
         self.pool = PagedKVCache(cfg, num_blocks, block_size)
-        self.sched = Scheduler(self.pool, max_batch, max_len)
+        self.prefix_cache = (RadixCache(self.pool, evict_policy)
+                             if prefix_cache else None)
+        self.sched = Scheduler(self.pool, max_batch, max_len,
+                               cache=self.prefix_cache)
         self.nb_max = -(-max_len // block_size)
         self.metrics = EngineMetrics()
         self._key = jax.random.PRNGKey(seed)
@@ -174,10 +198,19 @@ class ContinuousEngine:
         # arrays every call, so the update aliases in-place instead of
         # holding 2x pool memory. On CPU donation serializes dispatch and
         # breaks the async decode pipeline (~4x slower steps) — skip it.
+        def _prefill_suffix_fn(p, t, pos0, last_rel, kp, vp, pt, pl):
+            lg, ks, vs = paged_prefill_suffix(p, t, pos0, last_rel, kp, vp,
+                                              pt, pl, cfg)
+            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
+                lg, ks, vs
+
         donate = jax.default_backend() != "cpu"
         self._prefill = jax.jit(_prefill_fn)
+        self._prefill_suffix = jax.jit(_prefill_suffix_fn)
         self._scatter = jax.jit(scatter_prefill,
                                 donate_argnums=(0, 1) if donate else ())
+        self._scatter_off = jax.jit(scatter_prefill_offset,
+                                    donate_argnums=(0, 1) if donate else ())
         self._decode = jax.jit(_decode_fn,
                                donate_argnums=(2, 3) if donate else ())
 
@@ -196,9 +229,12 @@ class ContinuousEngine:
         table-width bucket; writes only into the reserved garbage block),
         then a synthetic mini-workload through the real submit/step path so
         the one-time eager-op compiles (token fetches, host→device
-        converts) happen now too. Temperature-sampled requests use eager
-        host-side sampling whose small one-time compiles are not covered.
-        Call once before serving traffic."""
+        converts) happen now too; with the prefix cache on, the synthetic
+        prompts share prefixes, so the suffix-prefill/COW path compiles a
+        first set of buckets as well (other suffix shapes compile on first
+        hit at serve time). The cache is flushed afterwards. Temperature-
+        sampled requests use eager host-side sampling whose small one-time
+        compiles are not covered. Call once before serving traffic."""
         if self.sched.has_work():
             raise RuntimeError(
                 "warmup() must run before any requests are submitted "
@@ -236,13 +272,21 @@ class ContinuousEngine:
         self.sched.finished.clear()
         self.metrics = EngineMetrics()
         # the synthetic workload's allocations shouldn't show up in the
-        # serving stats (notably peak_in_use → metrics.peak_blocks)
+        # serving stats (notably peak_in_use → metrics.peak_blocks), and
+        # its prompts shouldn't linger in the prefix cache
+        if self.prefix_cache is not None:
+            from repro.serve.radix_cache import CacheStats
+            self.prefix_cache.reset()
+            self.prefix_cache.stats = CacheStats()
         from repro.serve.kv_pool import PoolStats
-        self.pool.stats = PoolStats(self.pool.num_blocks, 0, 0, 0, 0)
+        self.pool.stats = PoolStats(self.pool.num_blocks)
 
     def step(self) -> Dict[int, List[int]]:
         """Advance the world one iteration: admit+prefill, join, one fused
-        decode step, evict. Returns {req_id: fresh tokens} for streaming."""
+        decode step, evict. Returns {req_id: fresh tokens} — only
+        temperature-sampled tokens appear here; greedy tokens stay on
+        device until ``drain()`` (``run(on_token=...)`` drains every step
+        for streaming)."""
         t0 = time.time()
         events: Dict[int, List[int]] = {}
         self._sync_rows()
@@ -265,6 +309,10 @@ class ContinuousEngine:
         self.metrics.steps += 1
         self.metrics.wall_s += time.time() - t0
         self.metrics.peak_blocks = self.pool.stats.peak_in_use
+        self.metrics.shared_blocks_peak = self.pool.stats.peak_shared
+        self.metrics.cow_copies = self.pool.stats.cow_copies
+        if self.prefix_cache is not None:
+            self.metrics.cache_evictions = self.prefix_cache.stats.evictions
         return events
 
     def _sync_rows(self) -> None:
@@ -328,7 +376,9 @@ class ContinuousEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _do_prefill(self, req: Request, events: Dict[int, List[int]]) -> None:
+    def _prefill_full(self, req: Request):
+        """Cold prefill: the whole prompt through ``paged_prefill``, K/V
+        scattered block-aligned into the request's (all-fresh) blocks."""
         bs = self.block_size
         plen = req.prompt_len
         Sp = -(-plen // bs) * bs
@@ -339,6 +389,52 @@ class ContinuousEngine:
         blocks = jnp.asarray(self.pool.blocks_of(req.req_id), jnp.int32)
         self.pool.k, self.pool.v = self._scatter(self.pool.k, self.pool.v,
                                                  ks, vs, blocks)
+        return greedy, lg
+
+    def _prefill_from_offset(self, req: Request, m: int):
+        """Prefix-cache hit: only the uncached suffix (positions ``m..``)
+        runs through the model; attention reads the shared prefix blocks
+        out of the pool, and the suffix K/V rows scatter to per-row
+        (block, offset) targets — the first may sit mid-block after a
+        copy-on-write tail splice. Pad rows route to garbage block 0."""
+        bs = self.block_size
+        plen = req.prompt_len
+        sl = plen - m
+        Sp = -(-sl // bs) * bs
+        tokens = np.zeros((1, Sp), np.int32)
+        tokens[0, :sl] = req.prompt[m:]
+        table = np.asarray(self.pool.blocks_of(req.req_id), np.int32)
+        nb_p = -(-m // bs)               # prefix blocks incl. the COW tail
+        w = self._pow2_bucket(nb_p)
+        pt = np.zeros((1, w), np.int32)
+        pt[0, :nb_p] = table[:nb_p]
+        pos = m + np.arange(Sp)
+        blk = np.zeros((Sp,), np.int32)
+        off = np.zeros((Sp,), np.int32)
+        blk[:sl] = table[pos[:sl] // bs]
+        off[:sl] = pos[:sl] % bs
+        greedy, lg, ks, vs = self._prefill_suffix(
+            self.params, jnp.asarray(tokens), jnp.asarray(m, jnp.int32),
+            jnp.asarray([sl - 1], jnp.int32), self.pool.k, self.pool.v,
+            jnp.asarray(pt), jnp.asarray([m], jnp.int32))
+        self.pool.k, self.pool.v = self._scatter_off(
+            self.pool.k, self.pool.v, ks, vs, jnp.asarray(blk),
+            jnp.asarray(off))
+        return greedy, lg
+
+    def _do_prefill(self, req: Request, events: Dict[int, List[int]]) -> None:
+        plen = req.prompt_len
+        m = req.n_prefix_hit
+        if m > 0:
+            greedy, lg = self._prefill_from_offset(req, m)
+        else:
+            greedy, lg = self._prefill_full(req)
+        self.metrics.prefill_tokens += plen - m
+        self.metrics.prefix_hit_tokens += m
+        if self.prefix_cache is not None:
+            # publish the freshly computed prompt blocks right away so
+            # requests admitted next step share with this in-flight one
+            self.prefix_cache.insert(req.req_id, req.prompt)
         B = self.max_batch
         row = self._rows.index(None)     # guaranteed: running < max_batch
         self._rows[row] = req
@@ -367,14 +463,19 @@ class ContinuousEngine:
         self.metrics.prefills += 1
         self.metrics.tokens_out += 1
 
-    def _table_width(self, occ) -> int:
-        """Decode block-table width: next power of two covering the longest
-        running request (few jit buckets instead of always nb_max)."""
-        need = max(self.pool.n_blocks_of(r.req_id) for _, r in occ)
+    def _pow2_bucket(self, need: int) -> int:
+        """Block-table width bucket: next power of two covering ``need``,
+        clamped to nb_max (few jit buckets instead of every width; the
+        clamp never truncates — any in-range table fits in nb_max)."""
         w = 1
         while w < need:
             w *= 2
-        return min(w, self.nb_max)
+        return max(min(w, self.nb_max), need)
+
+    def _table_width(self, occ) -> int:
+        """Decode block-table width covering the longest running request."""
+        return self._pow2_bucket(
+            max(self.pool.n_blocks_of(r.req_id) for _, r in occ))
 
     def _do_decode_step(self, events: Dict[int, List[int]]) -> None:
         B = self.max_batch

@@ -3,13 +3,28 @@
 The pool owns two device arrays shaped ``(L, num_blocks, Hkv, block_size,
 Dh)`` (layer-major inside each block, so one physical block holds a token
 span for *every* layer and the per-request block table is shared across the
-layer scan). Block 0 is reserved as the garbage block: padding rows of the
-decode batch and padded block-table tails point at it, so scatter writes from
-inactive batch slots land somewhere harmless.
+layer scan).
 
-Allocation metadata (free list, per-request block lists) is plain host-side
-Python — the scheduler calls ``alloc``/``append_block``/``free`` between
-device steps; the jitted steps only ever see the padded int32 block tables.
+**Garbage-block-0 convention.** Physical block 0 is reserved and never
+allocated: every padded structure in the serving stack — padding rows of the
+decode batch, padded block-table tails, padded scatter rows of an offset
+prefill — points at block 0, so device writes from inactive slots land
+somewhere harmless and device reads from padding return junk that is always
+masked by a length. Nothing may ever hand block 0 to a request or to the
+prefix cache; ``alloc`` draws from ``1..num_blocks`` only.
+
+Blocks are **reference counted** so the radix prefix cache
+(``serve/radix_cache.py``) can share one physical block between several
+requests and the tree itself:
+
+    refcount(b) == (#request tables containing b) + (1 if a tree node owns b)
+
+A block returns to the free list exactly when its refcount reaches zero.
+``alloc``/``append_block`` hand out fresh blocks at refcount 1; ``share``
+splices already-resident blocks into a request's table (refcount +1);
+``incref``/``decref`` are the tree-ownership handles. All metadata is
+host-side Python — the scheduler and cache mutate it between device steps;
+the jitted steps only ever see the padded int32 block tables.
 """
 from __future__ import annotations
 
@@ -23,16 +38,21 @@ from repro.configs.base import ModelConfig
 
 
 class PoolExhausted(Exception):
-    """Raised when an allocation cannot be satisfied; triggers preemption."""
+    """Raised when an allocation cannot be satisfied; triggers cache
+    eviction first and preemption as the last resort."""
 
 
 @dataclasses.dataclass
 class PoolStats:
     num_blocks: int          # usable blocks (excludes the garbage block)
-    blocks_in_use: int
-    peak_in_use: int
-    allocs: int
-    frees: int
+    blocks_in_use: int = 0   # blocks off the free list (refcount >= 1)
+    peak_in_use: int = 0
+    allocs: int = 0
+    frees: int = 0
+    # prefix-cache counters
+    shared_blocks: int = 0   # blocks with refcount >= 2 right now
+    peak_shared: int = 0
+    cow_copies: int = 0      # partially-filled tail blocks copied on write
 
     @property
     def utilization(self) -> float:
@@ -55,7 +75,42 @@ class PagedKVCache:
         self.v = jnp.zeros(shape, dt)
         self._free: List[int] = list(range(1, num_blocks + 1))
         self._tables: Dict[int, List[int]] = {}
-        self.stats = PoolStats(num_blocks, 0, 0, 0, 0)
+        self._ref = np.zeros(num_blocks + 1, np.int32)   # [0] unused
+        self._copy = None            # jitted COW kernel, built on first use
+        self.stats = PoolStats(num_blocks)
+
+    # -- refcounts --------------------------------------------------------
+
+    def _incref(self, b: int) -> None:
+        self._ref[b] += 1
+        if self._ref[b] == 2:
+            self.stats.shared_blocks += 1
+            self.stats.peak_shared = max(self.stats.peak_shared,
+                                         self.stats.shared_blocks)
+
+    def _decref(self, b: int) -> None:
+        if self._ref[b] <= 0:
+            raise ValueError(f"block {b}: refcount underflow (double free)")
+        self._ref[b] -= 1
+        if self._ref[b] == 1:
+            self.stats.shared_blocks -= 1
+        elif self._ref[b] == 0:
+            self._free.append(b)
+            self.stats.blocks_in_use -= 1
+            self.stats.frees += 1
+
+    def incref(self, b: int) -> None:
+        """Take a tree-ownership reference on an already-resident block."""
+        if self._ref[b] < 1:
+            raise ValueError(f"block {b} is not resident; cannot incref")
+        self._incref(b)
+
+    def decref(self, b: int) -> None:
+        """Drop a tree-ownership reference (eviction / node removal)."""
+        self._decref(b)
+
+    def refcount(self, b: int) -> int:
+        return int(self._ref[b])
 
     # -- allocation -------------------------------------------------------
 
@@ -66,42 +121,90 @@ class PagedKVCache:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_shared(self) -> int:
+        return self.stats.shared_blocks
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, req_id: int, n: int) -> List[int]:
-        """Allocate ``n`` blocks for a new request."""
-        if req_id in self._tables:
-            raise ValueError(f"request {req_id} already has blocks")
+    def _take_fresh(self, n: int) -> List[int]:
         if n > len(self._free):
             raise PoolExhausted(f"need {n} blocks, {len(self._free)} free")
         blocks = [self._free.pop() for _ in range(n)]
-        self._tables[req_id] = blocks
-        self._account(n)
-        return blocks
-
-    def append_block(self, req_id: int) -> int:
-        """Grow a request's table by one block (decode crossed a boundary)."""
-        if not self._free:
-            raise PoolExhausted("no free blocks")
-        b = self._free.pop()
-        self._tables[req_id].append(b)
-        self._account(1)
-        return b
-
-    def free(self, req_id: int) -> int:
-        """Return a finished/preempted request's blocks. Returns the count."""
-        blocks = self._tables.pop(req_id, [])
-        self._free.extend(blocks)
-        self.stats.blocks_in_use -= len(blocks)
-        self.stats.frees += len(blocks)
-        return len(blocks)
-
-    def _account(self, n: int) -> None:
+        for b in blocks:
+            self._ref[b] = 1
         self.stats.blocks_in_use += n
         self.stats.allocs += n
         self.stats.peak_in_use = max(self.stats.peak_in_use,
                                      self.stats.blocks_in_use)
+        return blocks
+
+    def alloc(self, req_id: int, n: int) -> List[int]:
+        """Append ``n`` fresh blocks (refcount 1) to a request's table,
+        creating the table if needed. With a prefix cache the table may
+        already hold spliced shared blocks; ``alloc`` extends it in logical
+        order (prefix first, fresh suffix after)."""
+        blocks = self._take_fresh(n)
+        self._tables.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def share(self, req_id: int, blocks: Sequence[int]) -> None:
+        """Splice already-resident blocks (a matched cache prefix) into a
+        request's table; each gains one reference."""
+        for b in blocks:
+            if self._ref[b] < 1:
+                raise ValueError(f"block {b} is not resident; cannot share")
+            self._incref(b)
+        self._tables.setdefault(req_id, []).extend(blocks)
+
+    def append_block(self, req_id: int) -> int:
+        """Grow a request's table by one block (decode crossed a boundary)."""
+        (b,) = self._take_fresh(1)
+        self._tables[req_id].append(b)
+        return b
+
+    def free(self, req_id: int) -> int:
+        """Drop a finished/preempted request's references. Blocks whose
+        refcount reaches zero return to the free list; blocks still owned by
+        the prefix-cache tree (or another request) stay resident. Returns
+        the number of blocks actually freed.
+
+        Raises ``ValueError`` on an unknown ``req_id`` — a double free or a
+        free of a never-allocated request is always a lifecycle bug, and
+        silently returning 0 here used to let the caller's accounting drift.
+        """
+        if req_id not in self._tables:
+            raise ValueError(
+                f"free: request {req_id} has no block table "
+                "(double free, or the request was never allocated)")
+        blocks = self._tables.pop(req_id)
+        before = len(self._free)
+        for b in blocks:
+            self._decref(b)
+        return len(self._free) - before
+
+    # -- device-side COW --------------------------------------------------
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """Copy one physical block's K/V (all layers) ``src`` → ``dst``:
+        the copy-on-write step when a request extends a partially-filled
+        cached tail block that other owners must keep intact. On
+        accelerators the pools are donated so the update aliases in place;
+        on CPU donation would serialize dispatch (see engine) — skipped."""
+        if self._copy is None:
+            import jax
+
+            def _cp(k, v, s, d):
+                return k.at[:, d].set(k[:, s]), v.at[:, d].set(v[:, s])
+
+            donate = jax.default_backend() != "cpu"
+            self._copy = jax.jit(
+                _cp, donate_argnums=(0, 1) if donate else ())
+        self.k, self.v = self._copy(self.k, self.v,
+                                    jnp.asarray(src, jnp.int32),
+                                    jnp.asarray(dst, jnp.int32))
+        self.stats.cow_copies += 1
 
     # -- views ------------------------------------------------------------
 

@@ -8,6 +8,13 @@ layout instead of a contiguous per-request cache:
   the true-last-token logits plus the per-layer K/V to scatter into the pool.
 * ``scatter_prefill``   — place a prefilled request's K/V into its allocated
   physical blocks (one fused device scatter).
+* ``paged_prefill_suffix`` — offset-aware prefill for the radix prefix
+  cache: only the *uncached* prompt suffix runs through the model (absolute
+  positions ``pos0..``), with each layer's attention reading the cached
+  prefix K/V straight out of the pool through the request's block table.
+* ``scatter_prefill_offset`` — place suffix K/V rows at arbitrary
+  (block, row) coordinates: the suffix may start mid-block when a matched
+  partial tail block was extended copy-on-write.
 * ``paged_decode_step`` — one token for the whole running batch: per layer,
   write the new K/V row through the block table, then run paged Softermax
   decode attention over the pool. Inactive batch slots carry block table 0
@@ -27,8 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.numerics import NEG_INF
 from repro.kernels.flash_decode_paged import (flash_decode_paged,
                                               paged_decode_ref)
+from repro.kernels.flash_decode_paged.ref import gather_kv
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import embed, logits, mlp, rmsnorm, rope
@@ -107,6 +116,129 @@ def scatter_prefill(
         blocks = seq[:, 0].reshape(L, Hkv, nb, BS, Dh)
         blocks = jnp.moveaxis(blocks, 2, 1)          # (L, nb, Hkv, BS, Dh)
         return pool.at[:, block_ids].set(blocks.astype(pool.dtype))
+
+    return place(k_pool, ks), place(v_pool, vs)
+
+
+# ---------------------------------------------------------------------------
+# Offset prefill (radix prefix cache: compute only the uncached suffix)
+# ---------------------------------------------------------------------------
+
+
+def _suffix_attention(q, k_pre, v_pre, k_suf, v_suf, pre_valid, q_pos,
+                      intmax):
+    """Dense softermax attention of suffix queries over [cached prefix ‖
+    in-flight suffix].
+
+    q (B, Hq, Sq, D) pre-scaled; k_pre/v_pre (B, Hkv, Sk, D) gathered from
+    the pool (rows >= prefix_len are garbage — masked by ``pre_valid``);
+    k_suf/v_suf (B, Hkv, Sq, D); q_pos (B, Sq) absolute positions. Same
+    exp2 / running-IntMax math as the chunked prefill and the paged decode
+    kernel, in closed form (one prompt, modest lengths)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k_pre.shape
+    group = Hq // Hkv
+    k = jnp.concatenate([k_pre, k_suf], axis=2)
+    v = jnp.concatenate([v_pre, v_suf], axis=2)
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    # prefix columns: valid rows are strictly before every suffix query;
+    # suffix columns: causal within the suffix (pad rows sit at the end,
+    # after every true position, so causality keeps their junk inert).
+    valid_pre = jnp.broadcast_to(pre_valid[:, None, :], (B, Sq, Sk))
+    valid_suf = q_pos[:, :, None] >= q_pos[:, None, :]
+    valid = jnp.concatenate([valid_pre, valid_suf], axis=2)   # (B, Sq, Sk+Sq)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    m = jnp.max(jnp.ceil(s) if intmax else s, axis=-1, keepdims=True)
+    p = jnp.exp2(s - m)
+    d = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(d > 0, p / jnp.where(d > 0, d, 1.0), 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def paged_prefill_suffix(
+    params,
+    tokens: jax.Array,        # (B, Sp) uncached suffix, right-padded
+    pos0: jax.Array,          # () int32 absolute position of tokens[:, 0]
+    last_rel: jax.Array,      # (B,) index of the true last token in tokens
+    k_pool: jax.Array,        # (L, N, Hkv, BS, Dh)
+    v_pool: jax.Array,
+    prefix_table: jax.Array,  # (B, W) physical blocks of the cached prefix
+    prefix_len: jax.Array,    # (B,) cached tokens (pad rows masked out)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill only the uncached suffix of a prompt whose first ``pos0``
+    tokens are already resident in the pool (radix prefix-cache hit).
+
+    Per layer the suffix Q/K/V are computed at absolute positions
+    ``pos0 + i`` (RoPE stays consistent with the cold path) and attention
+    runs over the cached prefix — gathered from the pool through
+    ``prefix_table`` — concatenated with the in-flight suffix. Returns
+    (true-last-token logits (B, V), ks, vs (L, B, Hkv, Sp, Dh)); the caller
+    scatters ks/vs with ``scatter_prefill_offset``. ``pos0 == 0`` with an
+    empty prefix degenerates to ``paged_prefill``'s math.
+    """
+    B, Sp = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    dh = cfg.head_dim_
+    premult, intmax = attn_mod._mode(cfg)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(Sp, dtype=jnp.int32),
+                                        (B, Sp))
+    x = embed(params["embed"], tokens, cfg)
+    W = prefix_table.shape[1]
+    BS = k_pool.shape[3]
+    pre_valid = jnp.arange(W * BS, dtype=jnp.int32)[None, :] < \
+        prefix_len[:, None]                                   # (B, W*BS)
+
+    def body(x, xs):
+        bp, kp_l, vp_l = xs
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+        q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+        k_pre = gather_kv(kp_l, prefix_table).astype(k.dtype)
+        v_pre = gather_kv(vp_l, prefix_table).astype(v.dtype)
+        o = _suffix_attention(q, k_pre, v_pre, k, v, pre_valid, positions,
+                              intmax)
+        y = attn_mod._out_proj(bp["mixer"], o, cfg)
+        x = x + y
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        x = shard_act(x + f, ("batch", "seq", "act_embed"))
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], k_pool, v_pool))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x_last = jnp.take_along_axis(
+        x, last_rel[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, d)
+    lg = logits(params["embed"], x_last, cfg)[:, 0]
+    return lg, ks, vs
+
+
+def scatter_prefill_offset(
+    k_pool: jax.Array,       # (L, N, Hkv, BS, Dh)
+    v_pool: jax.Array,
+    ks: jax.Array,           # (L, 1, Hkv, Sp, Dh) from paged_prefill_suffix
+    vs: jax.Array,
+    blk: jax.Array,          # (Sp,) int32 physical block per suffix row
+    off: jax.Array,          # (Sp,) int32 row within that block
+) -> Tuple[jax.Array, jax.Array]:
+    """Row-granular scatter for an offset prefill: suffix row ``i`` lands at
+    ``pool[:, blk[i], :, off[i], :]``. The suffix may start mid-block (a
+    copy-on-write tail continues where the cached rows end), so unlike
+    ``scatter_prefill`` the destination is not whole blocks; the caller
+    routes padding rows to garbage block 0."""
+    L, _, Hkv, Sp, Dh = ks.shape
+    h = jnp.arange(Hkv)
+
+    def place(pool, seq):
+        rows = jnp.swapaxes(seq[:, 0], 1, 2)          # (L, Sp, Hkv, Dh)
+        return pool.at[:, blk[:, None], h[None, :], off[:, None], :].set(
+            rows.astype(pool.dtype))
 
     return place(k_pool, ks), place(v_pool, vs)
 

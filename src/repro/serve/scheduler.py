@@ -10,21 +10,32 @@ Request lifecycle (see serve/README.md):
 decode slot is free; admitted requests prefill and join the running batch at
 the *next* step boundary (continuous batching — no waiting for the batch to
 drain). ``ensure_decode_blocks`` grows tables when a sequence crosses a block
-boundary; if the pool is exhausted it preempts the *youngest* running request
-(recompute-on-readmit policy: its blocks are freed, its generated tokens are
-discarded, and it rejoins the head of the queue), guaranteeing the oldest
-requests always make progress.
+boundary; if the pool is exhausted it first evicts unreferenced prefix-cache
+blocks, then preempts the *youngest* running request (recompute-on-readmit
+policy: its blocks are released, its generated tokens are discarded, and it
+rejoins the head of the queue), guaranteeing the oldest requests always make
+progress.
+
+With a ``RadixCache`` attached, admission charges a request only for the
+*uncached* part of its trajectory — the matched prefix is spliced out of the
+tree by reference — and cache-evictable blocks count toward the admission
+budget. On finish/preempt the request's prompt blocks are released back to
+the tree (they were published to it right after prefill) instead of being
+freed outright.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, TYPE_CHECKING
 
 import numpy as np
 
 from repro.serve.kv_pool import PagedKVCache, PoolExhausted
+
+if TYPE_CHECKING:   # import cycle: radix_cache uses kv_pool
+    from repro.serve.radix_cache import RadixCache
 
 QUEUED, PREFILL, DECODING, FINISHED = "queued", "prefill", "decoding", \
     "finished"
@@ -41,6 +52,9 @@ class Request:
     n_generated: int = 0             # tokens sampled (≥ len(tokens): the
                                      # engine materializes values lazily)
     n_cached: int = 0                # tokens resident in the paged cache
+    n_prefix_hit: int = 0            # prompt tokens reused from the radix
+                                     # tree at this admission (prefill skips
+                                     # them)
     epoch: int = 0                   # bumped on preemption: stale in-flight
                                      # token vectors are discarded by epoch
     n_preemptions: int = 0
@@ -74,8 +88,9 @@ class Scheduler:
     """
 
     def __init__(self, pool: PagedKVCache, max_batch: int,
-                 max_len: int):
+                 max_len: int, cache: Optional["RadixCache"] = None):
         self.pool = pool
+        self.cache = cache
         self.max_batch = max_batch
         self.max_len = max_len
         self.waiting: Deque[Request] = deque()
@@ -131,21 +146,44 @@ class Scheduler:
         its max_new decode tokens). Reserving the trajectory keeps admission
         from over-committing the pool, so preemption is a safety net rather
         than the steady state. ``max_n`` caps admissions per call so prefill
-        bursts interleave with decode steps instead of stalling them."""
+        bursts interleave with decode steps instead of stalling them.
+
+        With a prefix cache, a request is charged only for the blocks its
+        matched prefix does NOT cover, and cache-evictable blocks count as
+        free (``admit`` evicts them on the spot)."""
         admitted: List[Request] = []
         while self.waiting and len(self.running) < self.max_batch and \
                 (max_n is None or len(admitted) < max_n):
             nxt = self.waiting[0]
-            need = self.pool.blocks_for(nxt.prompt_len)
-            total = max(need, self.pool.blocks_for(
-                nxt.prompt_len + nxt.max_new - 1))
-            if self.pool.num_free - self._outstanding() < total:
+            plen = nxt.prompt_len
+            need = self.pool.blocks_for(plen)
+            total = max(need, self.pool.blocks_for(plen + nxt.max_new - 1))
+            if self.cache is not None:
+                cplan = self.cache.plan(nxt.prompt)
+                fresh = total - cplan.n_shared
+                budget = self.pool.num_free + cplan.evictable
+            else:
+                cplan, fresh, budget = None, total, self.pool.num_free
+            if budget - self._outstanding() < fresh:
                 break        # strict FIFO: don't let short requests overtake
             self.waiting.popleft()
-            self.pool.alloc(nxt.req_id, need)
+            hit = 0
+            if cplan is not None:
+                try:
+                    hit = self.cache.admit(
+                        nxt.req_id, nxt.prompt,
+                        ensure_free=fresh + self._outstanding(),
+                        plan=cplan)
+                except PoolExhausted:     # plan/admit races can't happen in
+                    self.waiting.appendleft(nxt)   # this loop; stay safe
+                    break
+            spliced = self.pool.n_blocks_of(nxt.req_id)   # shared + COW
+            if need > spliced:
+                self.pool.alloc(nxt.req_id, need - spliced)
             self._reserved[nxt.req_id] = total - need
             nxt.state = PREFILL
-            nxt.n_cached = nxt.prompt_len
+            nxt.n_prefix_hit = hit
+            nxt.n_cached = plen
             admitted.append(nxt)
             self.running.append(nxt)
         return admitted
@@ -171,6 +209,11 @@ class Scheduler:
                         self._reserved[req.req_id] = held - 1
                     break
                 except PoolExhausted:
+                    # shed unreferenced cached blocks before sacrificing
+                    # running work (cheapest memory in the system)
+                    if self.cache is not None and \
+                            self.cache.evict_until_free(1):
+                        continue
                     if len(self.running) == 1:
                         raise RuntimeError(
                             "pool exhausted and nothing to preempt: "
@@ -182,13 +225,23 @@ class Scheduler:
                         break            # req itself went back to the queue
         return preempted
 
+    def _release(self, req: Request) -> int:
+        """Give a leaving request's blocks back: through the cache when one
+        is attached (prompt prefix stays resident in the tree), straight to
+        the pool otherwise."""
+        if self.cache is not None:
+            return self.cache.release(req.req_id)
+        return self.pool.free(req.req_id)
+
     def _preempt(self, req: Request) -> None:
         """Recompute-on-readmit: the request's generated tokens are
         discarded and its stream restarts from the first token after it is
         readmitted (identical for greedy; may differ for sampled requests).
         Streaming consumers observe the restart; a stream-reset event is a
-        follow-up for the features that make preemption reachable."""
-        self.pool.free(req.req_id)
+        follow-up for the features that make preemption reachable. With a
+        prefix cache the blocks are released to the tree, so readmission
+        usually re-prefills only the last partial block."""
+        self._release(req)
         self._reserved.pop(req.req_id, None)
         self.running.remove(req)
         req.state = QUEUED
@@ -196,6 +249,7 @@ class Scheduler:
         req.tokens = []                         # recompute on readmission
         req.n_generated = 0
         req.n_cached = 0
+        req.n_prefix_hit = 0
         req.epoch += 1
         req.n_preemptions += 1
         self.n_preemptions += 1
@@ -206,7 +260,7 @@ class Scheduler:
     def evict_finished(self) -> List[Request]:
         done = [r for r in self.running if r.done]
         for req in done:
-            self.pool.free(req.req_id)
+            self._release(req)
             self._reserved.pop(req.req_id, None)
             self.running.remove(req)
             req.state = FINISHED

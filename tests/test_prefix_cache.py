@@ -1,0 +1,425 @@
+"""Radix-tree prefix cache: tree/refcount invariants under random
+interleavings, eviction policy order, copy-on-write tails, strict pool
+frees, and cached-vs-cold greedy equality through the engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config, model_fns, reduce_config
+from repro.serve import (CacheStats, ContinuousEngine, PagedKVCache,
+                         RadixCache, Scheduler)
+
+_rng = np.random.default_rng(23)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("qwen3-4b"))
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Shared invariant checker (the contract radix_cache.py documents)
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(pool: PagedKVCache, cache: RadixCache = None):
+    N = pool.num_blocks
+    free = pool._free
+    assert len(set(free)) == len(free), "duplicate free-list entries"
+    assert 0 not in free, "garbage block 0 leaked into the free list"
+    table_blocks = [b for t in pool._tables.values() for b in t]
+    tree_nodes = cache._walk() if cache is not None else []
+    tree_blocks = [nd.block for nd in tree_nodes]
+    assert len(set(tree_blocks)) == len(tree_blocks), \
+        "two tree nodes own one physical block"
+    free_set, tree_set = set(free), set(tree_blocks)
+    for b in range(1, N + 1):
+        rc = pool.refcount(b)
+        expect = table_blocks.count(b) + (1 if b in tree_set else 0)
+        assert rc == expect, \
+            f"block {b}: refcount {rc} != tables+tree {expect}"
+        assert (b in free_set) == (rc == 0), \
+            f"block {b}: rc {rc} but free={b in free_set}"
+    assert pool.stats.blocks_in_use == N - len(free)
+    if cache is not None:
+        pins = {}
+        for nodes in cache._held.values():
+            for nd in nodes:
+                pins[id(nd)] = pins.get(id(nd), 0) + 1
+        for nd in tree_nodes:
+            assert nd.ref == pins.get(id(nd), 0), \
+                f"node {nd!r}: ref {nd.ref} != pins {pins.get(id(nd), 0)}"
+            if 0 < len(nd.key) < cache.bs:
+                assert not nd.children, "partial tail node has children"
+
+
+# ---------------------------------------------------------------------------
+# Metadata-level: tree, refcounts, eviction, COW — no model involved
+# ---------------------------------------------------------------------------
+
+
+class TestRadixTree:
+    def _cache(self, cfg, n=12, bs=4, policy="lru"):
+        pool = PagedKVCache(cfg, num_blocks=n, block_size=bs)
+        return pool, RadixCache(pool, policy)
+
+    def test_insert_match_release_roundtrip(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg)
+        prompt = np.arange(1, 11, dtype=np.int32)          # 10 toks, bs 4
+        pool.alloc(7, 3)
+        cache.insert(7, prompt)            # 2 full nodes + 1 partial tail
+        assert cache.cached_blocks == 3
+        assert cache.evictable_blocks() == 0               # pinned by req 7
+        check_invariants(pool, cache)
+        # identical prompt: 2 full blocks + 2 of 3 tail rows (cap len-1)
+        assert cache.lookup(prompt) == 9
+        # a diverging prompt matches only the shared full blocks
+        other = np.concatenate([prompt[:8], [99, 98]]).astype(np.int32)
+        assert cache.lookup(other) == 8
+        assert cache.release(7) == 0       # tree kept every block resident
+        assert cache.evictable_blocks() == 3
+        check_invariants(pool, cache)
+
+    def test_admit_splices_and_cows(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg)
+        prompt = np.arange(1, 11, dtype=np.int32)
+        pool.alloc(1, 3)
+        cache.insert(1, prompt)
+        cache.release(1)
+        hit = cache.admit(2, prompt, ensure_free=1)
+        assert hit == 9
+        table = pool.blocks_of(2)
+        assert len(table) == 3
+        # first two spliced by reference (shared with the tree)…
+        tree_blocks = {nd.block for nd in cache._walk()}
+        assert table[0] in tree_blocks and table[1] in tree_blocks
+        assert pool.refcount(table[0]) == 2
+        # …the tail copied-on-write into a block only req 2 owns
+        assert table[2] not in tree_blocks
+        assert pool.refcount(table[2]) == 1
+        assert pool.stats.cow_copies == 1
+        check_invariants(pool, cache)
+        cache.release(2)
+        check_invariants(pool, cache)
+
+    def test_admit_cow_with_no_free_blocks_leaves_no_state(self, setup):
+        """Bare-API admit (ensure_free=0) needing a COW block while the
+        free list is empty must raise before pinning or splicing anything."""
+        cfg, _ = setup
+        pool, cache = self._cache(cfg, n=2, bs=4)
+        prompt = np.arange(1, 7, dtype=np.int32)   # 1 full + 2-token tail
+        pool.alloc(1, 2)
+        cache.insert(1, prompt)
+        cache.release(1)
+        assert pool.num_free == 0                  # tree owns both blocks
+        from repro.serve.kv_pool import PoolExhausted
+        with pytest.raises(PoolExhausted):
+            cache.admit(2, prompt)
+        assert 2 not in cache._held and 2 not in pool._tables
+        assert all(nd.ref == 0 for nd in cache._walk())
+        check_invariants(pool, cache)
+
+    def test_eviction_lru_order_and_pinning(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg, n=12, bs=4, policy="lru")
+        a = np.arange(1, 5, dtype=np.int32)        # one block each
+        b = np.arange(11, 15, dtype=np.int32)
+        pool.alloc(1, 1), cache.insert(1, a), cache.release(1)
+        pool.alloc(2, 1), cache.insert(2, b), cache.release(2)
+        blk_a = next(nd.block for nd in cache._walk() if nd.key == tuple(a))
+        blk_b = next(nd.block for nd in cache._walk() if nd.key == tuple(b))
+        # touch `a` (admit pins + touches, then release) so `b` is the LRU
+        cache.admit(3, np.concatenate([a, [9]]).astype(np.int32))
+        cache.release(3)
+        assert cache.evict(1) == 1
+        remaining = {nd.block for nd in cache._walk()}
+        assert blk_b not in remaining and blk_a in remaining
+        check_invariants(pool, cache)
+        # pinned paths are never evicted
+        cache.admit(4, np.concatenate([a, [9]]).astype(np.int32))
+        assert cache.evict(8) == 0         # `a` pinned by running req 4
+        assert cache.cached_blocks == 1
+        cache.release(4)
+        assert cache.evict(8) == 1
+        assert cache.cached_blocks == 0
+        check_invariants(pool, cache)
+
+    def test_eviction_fifo_order(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg, policy="fifo")
+        a = np.arange(1, 5, dtype=np.int32)
+        b = np.arange(11, 15, dtype=np.int32)
+        pool.alloc(1, 1), cache.insert(1, a), cache.release(1)
+        pool.alloc(2, 1), cache.insert(2, b), cache.release(2)
+        blk_a = next(nd.block for nd in cache._walk() if nd.key == tuple(a))
+        cache.admit(3, np.concatenate([a, [9]]).astype(np.int32))
+        cache.release(3)                   # LRU would now evict `b` first
+        assert cache.evict(1) == 1
+        assert blk_a not in {nd.block for nd in cache._walk()}
+
+    def test_parent_becomes_evictable_leaf_first(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg)
+        prompt = np.arange(1, 13, dtype=np.int32)  # 3 full blocks
+        pool.alloc(1, 3)
+        cache.insert(1, prompt)
+        cache.release(1)
+        assert cache.cached_blocks == 3
+        assert cache.evict(3) == 3         # leaf, then parent, then root kid
+        assert cache.cached_blocks == 0
+        check_invariants(pool, cache)
+
+    def test_full_node_covers_partial_tail_insert(self, setup):
+        """A full-block node already serves any shorter tail's rows:
+        inserting prompt [1..7] after [1..8] must not donate a duplicate
+        (5,6,7) leaf next to the (5,6,7,8) block."""
+        cfg, _ = setup
+        pool, cache = self._cache(cfg)
+        full = np.arange(1, 9, dtype=np.int32)     # 2 full blocks
+        pool.alloc(1, 2)
+        cache.insert(1, full)
+        cache.release(1)
+        assert cache.cached_blocks == 2
+        shorter = np.arange(1, 8, dtype=np.int32)  # 1 full + 3-token tail
+        hit = cache.admit(2, shorter, ensure_free=1)
+        assert hit == 6                  # 1 full block + COW run of 2
+        pool.alloc(2, 2 - pool.n_blocks_of(2))
+        cache.insert(2, shorter)
+        assert cache.cached_blocks == 2  # tail covered by the full node
+        assert cache.stats.evictions == 0
+        check_invariants(pool, cache)
+        cache.release(2)
+        check_invariants(pool, cache)
+
+    def test_evict_until_free_reaches_target(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg, n=6, bs=4)
+        for rid in (1, 2, 3):
+            pool.alloc(rid, 1)
+            cache.insert(rid, np.arange(rid * 10, rid * 10 + 4,
+                                        dtype=np.int32))
+            cache.release(rid)
+        assert pool.num_free == 3 and cache.cached_blocks == 3
+        assert cache.evict_until_free(5)
+        assert pool.num_free == 5 and cache.cached_blocks == 1
+        assert not cache.evict_until_free(7)     # only 6 blocks exist
+        assert cache.cached_blocks == 0
+        check_invariants(pool, cache)
+
+    def test_duplicate_insert_keeps_incumbent(self, setup):
+        cfg, _ = setup
+        pool, cache = self._cache(cfg)
+        prompt = np.arange(1, 9, dtype=np.int32)   # 2 full blocks
+        pool.alloc(1, 2)
+        cache.insert(1, prompt)
+        pool.alloc(2, 2)                   # same prompt computed cold
+        cache.insert(2, prompt)            # concurrently (same admit batch)
+        assert cache.cached_blocks == 2    # no duplicate nodes
+        check_invariants(pool, cache)
+        cache.release(1)
+        check_invariants(pool, cache)
+        cache.release(2)                   # req 2's duplicates fully freed
+        assert pool.num_free + cache.cached_blocks == pool.num_blocks
+        check_invariants(pool, cache)
+
+
+class TestStrictFree:
+    def test_double_free_raises(self, setup):
+        cfg, _ = setup
+        pool = PagedKVCache(cfg, num_blocks=4, block_size=4)
+        pool.alloc(1, 2)
+        pool.free(1)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(1)
+
+    def test_unknown_req_free_raises(self, setup):
+        cfg, _ = setup
+        pool = PagedKVCache(cfg, num_blocks=4, block_size=4)
+        with pytest.raises(ValueError, match="no block table"):
+            pool.free(42)
+
+    def test_share_unresident_block_raises(self, setup):
+        cfg, _ = setup
+        pool = PagedKVCache(cfg, num_blocks=4, block_size=4)
+        with pytest.raises(ValueError, match="not resident"):
+            pool.share(1, [3])
+
+
+# ---------------------------------------------------------------------------
+# Random interleavings keep the pool/tree/scheduler mutually consistent
+# ---------------------------------------------------------------------------
+
+
+OPS = ("submit", "admit", "step", "preempt", "evict", "finish")
+
+
+def _drive_interleaving(cfg, ops, choices):
+    """Execute one op sequence against a scheduler+cache stack, mimicking
+    the engine's calling convention (admit → publish → count-based decode),
+    checking the refcount/free-list contract after every op."""
+    pool = PagedKVCache(cfg, num_blocks=12, block_size=4)
+    cache = RadixCache(pool)
+    sched = Scheduler(pool, max_batch=3, max_len=32, cache=cache)
+    prefixes = [np.arange(1, 5), np.arange(1, 9), np.arange(11, 23)]
+    for i, op in enumerate(ops):
+        c = choices[i % len(choices)]
+        if op == "submit" and len(sched.waiting) < 4:
+            pre = prefixes[c % len(prefixes)]
+            suf = np.asarray([50 + c, 60 + c, 70 + c][:1 + c % 3])
+            sched.submit(np.concatenate([pre, suf]).astype(np.int32),
+                         max_new=1 + c % 5)
+        elif op == "admit":
+            for req in sched.admit(2):
+                cache.insert(req.req_id, req.prompt)   # engine's publish
+        elif op == "step" and sched.running:
+            sched.ensure_decode_blocks()
+            for req in sched.running:
+                req.n_cached += 1
+                req.n_generated += 1
+            sched.evict_finished()
+        elif op == "preempt" and len(sched.running) > 1:
+            sched._preempt(sched.running[-1])
+        elif op == "evict":
+            cache.evict(1 + c % 3)
+        elif op == "finish" and sched.running:
+            req = sched.running[c % len(sched.running)]
+            req.n_generated = req.max_new
+            sched.evict_finished()
+        check_invariants(pool, cache)
+    # drain everything and confirm only tree blocks stay resident
+    while sched.has_work():
+        for req in sched.admit():
+            cache.insert(req.req_id, req.prompt)
+        sched.ensure_decode_blocks()
+        for req in sched.running:
+            req.n_cached += 1
+            req.n_generated += 1
+        sched.evict_finished()
+        check_invariants(pool, cache)
+    assert pool.num_free + cache.cached_blocks == pool.num_blocks
+    assert pool.stats.shared_blocks == 0
+
+
+class TestInterleavingInvariants:
+    def test_seeded_random_interleavings(self, setup):
+        """No-dependency fallback for the hypothesis property test below:
+        many seeded random schedules through the same driver."""
+        cfg, _ = setup
+        for seed in range(30):
+            rng = np.random.default_rng(seed)
+            ops = [OPS[i] for i in rng.integers(0, len(OPS), 80)]
+            choices = list(rng.integers(0, 97, 80))
+            _drive_interleaving(cfg, ops, choices)
+
+    def test_hypothesis_interleavings(self, setup):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+        cfg, _ = setup
+
+        @settings(max_examples=30, deadline=None)
+        @given(st.lists(st.sampled_from(OPS), min_size=1, max_size=60),
+               st.lists(st.integers(0, 96), min_size=1, max_size=60))
+        def run(ops, choices):
+            _drive_interleaving(cfg, ops, choices)
+
+        run()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: cached and cold paths decode identically
+# ---------------------------------------------------------------------------
+
+
+class TestCachedVsCold:
+    def _cold_tokens(self, cfg, params, prompts, max_new, max_len):
+        eng = ContinuousEngine(cfg, params, block_size=8, num_blocks=64,
+                               max_batch=4, max_len=max_len,
+                               prefix_cache=False)
+        hs = [eng.submit(p, max_new) for p in prompts]
+        res = eng.run()
+        return [res[h.req_id].tokens for h in hs]
+
+    def test_identical_prompt_resubmission(self, setup):
+        """Second submission of the same prompt hits the tree (incl. the
+        COW tail: 20 % 8 != 0) and must decode identically."""
+        cfg, params = setup
+        prompt = _rng.integers(1, cfg.vocab_size, (20,)).astype(np.int32)
+        (cold,) = self._cold_tokens(cfg, params, [prompt], 6, 32)
+        eng = ContinuousEngine(cfg, params, block_size=8, num_blocks=64,
+                               max_batch=4, max_len=32)
+        h1 = eng.submit(prompt, 6)
+        r1 = eng.run()
+        h2 = eng.submit(prompt, 6)
+        r2 = eng.run()
+        assert r1[h1.req_id].tokens == cold
+        assert r2[h2.req_id].tokens == cold
+        assert r2[h2.req_id].n_prefix_hit == 19     # 2 blocks + COW(3 rows)
+        assert eng.pool.stats.cow_copies >= 1
+        check_invariants(eng.pool, eng.prefix_cache)
+
+    def test_shared_prefix_batch_matches_nocache(self, setup):
+        cfg, params = setup
+        shared = _rng.integers(1, cfg.vocab_size, (16,))
+        prompts = [np.concatenate(
+            [shared, _rng.integers(1, cfg.vocab_size, (n,))]
+        ).astype(np.int32) for n in (5, 9, 13)]
+        cold = self._cold_tokens(cfg, params, prompts, 5, 48)
+        eng = ContinuousEngine(cfg, params, block_size=8, num_blocks=64,
+                               max_batch=4, max_len=48)
+        hs = [eng.submit(p, 5) for p in prompts]
+        res = eng.run()
+        for h, want in zip(hs, cold):
+            assert res[h.req_id].tokens == want
+        assert eng.metrics.prefix_hit_tokens >= 16  # 3rd request reused
+        assert eng.metrics.prefill_savings > 1.0
+        check_invariants(eng.pool, eng.prefix_cache)
+
+    def test_scarce_pool_evicts_instead_of_failing(self, setup):
+        """The pool only fits one trajectory + a little; each admission
+        evicts the previous request's cached blocks and everything still
+        decodes to the cold answer."""
+        cfg, params = setup
+        prompts = [_rng.integers(1, cfg.vocab_size, (16,)).astype(np.int32)
+                   for _ in range(3)]
+        cold = self._cold_tokens(cfg, params, prompts, 8, 32)
+        eng = ContinuousEngine(cfg, params, block_size=8, num_blocks=4,
+                               max_batch=4, max_len=32)
+        hs = [eng.submit(p, 8) for p in prompts]
+        res = eng.run()
+        for h, want in zip(hs, cold):
+            assert res[h.req_id].tokens == want
+        assert eng.prefix_cache.stats.evictions > 0
+        assert eng.metrics.preemptions == 0
+        check_invariants(eng.pool, eng.prefix_cache)
+
+    def test_warmup_flushes_cache(self, setup):
+        cfg, params = setup
+        eng = ContinuousEngine(cfg, params, block_size=8, num_blocks=32,
+                               max_batch=4, max_len=40)
+        eng.warmup()
+        assert eng.prefix_cache.cached_blocks == 0
+        assert eng.pool.num_free == 32
+        assert eng.prefix_cache.stats == CacheStats()
+        check_invariants(eng.pool, eng.prefix_cache)
+
+
+@pytest.mark.slow
+class TestBenchSmoke:
+    def test_prefix_cache_bench_smoke(self):
+        """The benchmark's CI mode: asserts >=1.8x prefill-token savings
+        and cached-vs-cold greedy equality on a tiny workload."""
+        import pathlib
+        import sys
+        root = pathlib.Path(__file__).resolve().parent.parent
+        sys.path.insert(0, str(root / "benchmarks"))
+        try:
+            import prefix_cache_bench
+            ratio = prefix_cache_bench.main(["--smoke"])
+        finally:
+            sys.path.pop(0)
+        assert ratio > 0

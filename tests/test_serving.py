@@ -209,7 +209,10 @@ class TestContinuousEngine:
         for h in handles:
             assert len(res[h.req_id].tokens) == 4
             assert streamed[h.req_id] == res[h.req_id].tokens
-        assert eng.pool.stats.blocks_in_use == 0      # everything returned
+        # every block is either free or retained by the prefix-cache tree
+        cached = eng.prefix_cache.cached_blocks
+        assert eng.pool.stats.blocks_in_use == cached
+        assert eng.pool.num_free + cached == 32
         assert eng.metrics.tok_per_s > 0
 
     def test_scarce_pool_queues_and_recovers(self, setup):
@@ -225,7 +228,10 @@ class TestContinuousEngine:
         assert eng.metrics.preemptions == 0
         for h in handles:
             assert len(res[h.req_id].tokens) == 10
-        assert eng.pool.num_free == 4
+        # the tree keeps the last request's prompt blocks resident; the
+        # rest of the scarce pool was evicted to admit each successor
+        assert eng.pool.num_free + eng.prefix_cache.cached_blocks == 4
+        assert eng.prefix_cache.stats.evictions > 0
 
     def test_mixed_temperature_batch(self, setup):
         """Greedy and sampled requests share one decode batch (the engine
