@@ -1,0 +1,292 @@
+"""Chunked-prefill kernel vs dense one-shot suffix prefill (long documents).
+
+Replays the long-document cached-prefix serving shape — every request is a
+long unique document body behind a shared, radix-cache-resident head (RAG /
+long-context chat: the head is the system prompt or a shared document, the
+body is new text) — through the two prefill paths at an EQUAL pool budget:
+
+* **dense**   — the PR-2 path: ``paged_prefill_suffix`` computes the whole
+  uncached remainder as ONE dense attention: the full (suffix, prefix +
+  suffix) score matrix is materialized per layer and the prefix KV is
+  gathered out of the pool in one piece through the engine's
+  pow2-bucketed prefix table (junk columns masked). Quadratic in the
+  suffix, with a working set that falls out of cache for long documents.
+* **chunked** — this PR: ``paged_prefill_chunked`` walks the same remainder
+  in fixed-size chunks through ``kernels/flash_prefill_paged``; each chunk
+  scatters its K/V into the pool and attends [cached prefix ‖ earlier
+  chunks ‖ itself] through the block table, so no score matrix ever exceeds
+  (chunk, prefix + seen) and nothing is gathered-and-concatenated.
+
+Two measurements:
+
+1. **Op-level prefill tok/s** (the headline, asserted ≥ 2× in full mode):
+   both paths prefill the identical suffix over the identical resident
+   prefix, including their pool scatters, best-of-N over strictly
+   alternating rounds (min is the noise-robust estimator on a shared box —
+   the true cost shows when the machine is quiet, and alternating rounds
+   deny either path a quiet-period advantage). This is exactly the hot
+   path the engine dispatches per prefilling request; timing it directly
+   keeps decode steps and scheduler noise out of the ratio.
+2. **Engine-level greedy equality**: a chunked ``ContinuousEngine`` and a
+   one-shot engine serve the same workload at the same pool budget; every
+   request's tokens must be identical (and the op-level argmax logits must
+   agree dense vs chunked) — the speed is not bought with drift.
+
+Full mode also writes ``BENCH_prefill.json`` (repo root) so later PRs have
+a perf trajectory to compare against.
+
+Prints ``prefill_paged_bench,...`` CSV lines, last one the tok/s ratio.
+
+    PYTHONPATH=src python benchmarks/prefill_paged_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import numpy as np
+
+
+def make_docs(n: int, shared_len: int, doc_len: int, vocab: int,
+              seed: int) -> List[np.ndarray]:
+    """Shared head (system prompt / shared document) + long unique body."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(1, vocab, (shared_len,))
+    return [np.concatenate([head, rng.integers(1, vocab, (doc_len,))]
+                           ).astype(np.int32) for _ in range(n)]
+
+
+def _pow2(n: int) -> int:
+    w = 1
+    while w < n:
+        w *= 2
+    return w
+
+
+def _time_op_paths(cfg, params, prompt, *, shared_len, block_size, chunk,
+                   repeats):
+    """Prefill ``prompt[shared_len:]`` over a resident prefix through both
+    paths, alternating rounds; returns (dense_s, chunked_s, argmax_equal).
+    Each round re-scatters into the same pool geometry (equal budget).
+
+    Both paths are driven exactly as ``ContinuousEngine`` dispatches them,
+    table-width policies included: the dense path gathers its prefix
+    through a pow2-bucketed table (``_prefill_from_offset``), the chunked
+    path uses chunk-quantized covers (``_do_prefill_chunk``). Host-side
+    input arrays are precomputed symmetrically for both so the timing
+    isolates device work."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.kv_pool import PagedKVCache
+    from repro.serve.paged_step import (paged_prefill, paged_prefill_chunked,
+                                        paged_prefill_suffix, scatter_prefill,
+                                        scatter_prefill_offset)
+
+    bs = block_size
+    S = prompt.shape[0]
+    m0 = shared_len
+    nb = -(-S // bs)
+    pool = PagedKVCache(cfg, num_blocks=nb, block_size=bs)
+    table = np.asarray(pool.alloc(0, nb), np.int32)
+
+    jf_full = jax.jit(paged_prefill, static_argnames=("cfg",))
+    jf_dense = jax.jit(paged_prefill_suffix, static_argnames=("cfg",))
+    jf_chunk = jax.jit(paged_prefill_chunked, static_argnames=("cfg",))
+    jf_sc = jax.jit(scatter_prefill)
+    jf_sco = jax.jit(scatter_prefill_offset)
+
+    # make the shared head resident once (cold full prefill of the head,
+    # right-padded to a block multiple like the engine's cold path)
+    mb = -(-m0 // bs) * bs
+    head = np.zeros((1, mb), np.int32)
+    head[0, :m0] = prompt[:m0]
+    _, ks, vs = jf_full(params, jnp.asarray(head),
+                        jnp.asarray([m0 - 1], jnp.int32), cfg=cfg)
+    pool.k, pool.v = jf_sc(pool.k, pool.v, ks, vs,
+                           jnp.asarray(table[:mb // bs], jnp.int32))
+
+    sl = S - m0
+    slp = -(-sl // bs) * bs
+    toks = np.zeros((1, slp), np.int32)
+    toks[0, :sl] = prompt[m0:]
+    toks = jnp.asarray(toks)
+    pos = m0 + np.arange(slp)
+    blk_np = np.where(pos < S, table[np.minimum(pos, S - 1) // bs], 0)
+    blk = jnp.asarray(blk_np, jnp.int32)
+    off = jnp.asarray(pos % bs, jnp.int32)
+    W_pre = -(-m0 // bs)
+    wp = _pow2(W_pre)                # dense engine path: pow2 prefix table
+    ptd = np.zeros((1, wp), np.int32)
+    ptd[0, :W_pre] = table[:W_pre]
+    ptd = jnp.asarray(ptd)
+    last = jnp.asarray([sl - 1], jnp.int32)
+    pos0 = jnp.asarray(m0, jnp.int32)
+    m0j = jnp.asarray([m0], jnp.int32)
+
+    cq = chunk // bs
+    chunks = []
+    m = m0
+    while m < S:
+        c = min(chunk, S - m)
+        ct = np.zeros((1, chunk), np.int32)    # engine pads chunks to C
+        ct[0, :c] = prompt[m:m + c]
+        cover = min(-(-(m + chunk) // bs), nb)
+        w = -(-cover // cq) * cq     # chunked engine path: quantized cover
+        pt = np.zeros((1, w), np.int32)
+        pt[0, :cover] = table[:cover]
+        cpos = m + np.arange(chunk)
+        cblk = np.where(cpos < S, table[np.minimum(cpos, S - 1) // bs], 0)
+        cblk[c:] = 0                 # pad rows -> garbage block 0
+        chunks.append((jnp.asarray(ct), jnp.asarray(m, jnp.int32),
+                       jnp.asarray([c - 1], jnp.int32), jnp.asarray(pt),
+                       jnp.asarray(cblk, jnp.int32),
+                       jnp.asarray(cpos % bs, jnp.int32)))
+        m += c
+
+    def dense_once():
+        t0 = time.time()
+        lg, ks, vs = jf_dense(params, toks, pos0, last, pool.k, pool.v,
+                              ptd, m0j, cfg=cfg)
+        pool.k, pool.v = jf_sco(pool.k, pool.v, ks, vs, blk, off)
+        jax.block_until_ready(pool.k)
+        return time.time() - t0, lg
+
+    def chunked_once():
+        t0 = time.time()
+        lg = None
+        for ct, p0, lr, pt, bl, of in chunks:
+            lg, pool.k, pool.v = jf_chunk(params, ct, p0, lr, pool.k,
+                                          pool.v, pt, bl, of, cfg)
+        jax.block_until_ready(pool.k)
+        return time.time() - t0, lg
+
+    dense_once(), chunked_once()                 # compile both
+    dense_s, chunked_s = [], []
+    lg_d = lg_c = None
+    for _ in range(repeats):
+        td, lg_d = dense_once()
+        tc, lg_c = chunked_once()
+        dense_s.append(td)
+        chunked_s.append(tc)
+    eq = bool(np.argmax(np.asarray(lg_d)) == np.argmax(np.asarray(lg_c)))
+    return float(min(dense_s)), float(min(chunked_s)), eq
+
+
+def _engine_equality(cfg, params, prompts, *, block_size, num_blocks,
+                     max_batch, max_len, max_new, chunk):
+    """Serve the workload through a chunked and a one-shot engine at the
+    same pool budget; returns (tokens equal, chunked metrics)."""
+    from repro.serve import ContinuousEngine
+    outs = {}
+    eng = None
+    for c in (0, chunk):
+        eng = ContinuousEngine(cfg, params, block_size=block_size,
+                               num_blocks=num_blocks, max_batch=max_batch,
+                               max_len=max_len, prefill_chunk=c)
+        handles = [eng.submit(p, max_new) for p in prompts]
+        results = eng.run()
+        outs[c] = [results[h.req_id].tokens for h in handles]
+    return outs[0] == outs[chunk], eng.metrics
+
+
+def main(argv=None) -> float:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--shared-len", type=int, default=576,
+                    help="shared head tokens, radix-cache-resident (the "
+                         "cached prefix the suffix attends through the "
+                         "block table); deliberately not a pow2 block "
+                         "count — the dense engine path pow2-buckets its "
+                         "prefix gather, and that shipped cost is part of "
+                         "what the kernel path removes (with a pow2 head "
+                         "the ratio drops ~0.3x but stays >= 2)")
+    ap.add_argument("--doc-len", type=int, default=3072,
+                    help="unique document-body tokens per request (the "
+                         "uncached remainder both paths must prefill; long "
+                         "enough that the one-shot score matrix is the "
+                         "dominant cost — the regime chunking targets)")
+    ap.add_argument("--chunk", type=int, default=256,
+                    help="prefill chunk size (tokens)")
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=7,
+                    help="alternating op-level rounds; best-of reported")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_prefill.json",
+                    help="full mode: write the JSON perf record here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast mode for CI (asserts chunked==dense "
+                         "greedy outputs; speed reported, not gated)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = 2
+        args.shared_len = 96
+        args.doc_len = 256
+        args.chunk = 128
+        args.repeats = 2
+
+    import jax
+    from repro.models.registry import get_config, model_fns, reduce_config
+    cfg = reduce_config(get_config(args.arch))
+    params = model_fns(cfg).init(jax.random.PRNGKey(0))
+
+    S = args.shared_len + args.doc_len
+    prompts = make_docs(args.requests, args.shared_len, args.doc_len,
+                        cfg.vocab_size, args.seed)
+    print(f"prefill_paged_bench,workload,requests,{args.requests},"
+          f"shared,{args.shared_len},doc,{args.doc_len},"
+          f"chunk,{args.chunk},block_size,{args.block_size}")
+
+    dense_s, chunked_s, argmax_eq = _time_op_paths(
+        cfg, params, prompts[0], shared_len=args.shared_len,
+        block_size=args.block_size, chunk=args.chunk, repeats=args.repeats)
+    assert argmax_eq, "dense and chunked prefill disagree on the next token"
+    sl = args.doc_len
+    ratio = dense_s / chunked_s
+    print(f"prefill_paged_bench,dense,prefill_s,{dense_s:.3f},"
+          f"tok_s,{sl / dense_s:.0f}")
+    print(f"prefill_paged_bench,chunked,prefill_s,{chunked_s:.3f},"
+          f"tok_s,{sl / chunked_s:.0f}")
+
+    # equal pool budget for both engines: every trajectory + slack
+    num_blocks = args.requests * ((S + args.max_new) // args.block_size + 2)
+    tokens_eq, metrics = _engine_equality(
+        cfg, params, prompts, block_size=args.block_size,
+        num_blocks=num_blocks, max_batch=max(2, args.requests // 2),
+        max_len=S + args.max_new, max_new=args.max_new, chunk=args.chunk)
+    assert tokens_eq, "chunked engine diverged from one-shot engine"
+    print(f"prefill_paged_bench,engine,greedy_equal,1,"
+          f"prefill_chunks,{metrics.prefill_chunks},"
+          f"prefix_hit_tokens,{metrics.prefix_hit_tokens}")
+    print(f"prefill_paged_bench,ratio_dense_over_chunked,{ratio:.2f}")
+
+    if not args.smoke:
+        assert ratio >= 2.0, (
+            f"chunked prefill speedup {ratio:.2f}x < 2.0x")
+        record = {
+            "bench": "prefill_paged",
+            "workload": {"requests": args.requests,
+                         "shared_len": args.shared_len,
+                         "doc_len": args.doc_len, "chunk": args.chunk,
+                         "block_size": args.block_size,
+                         "arch": args.arch, "reduced": True},
+            "backend": jax.default_backend(),
+            "dense": {"prefill_s": round(dense_s, 4),
+                      "tok_s": round(sl / dense_s, 1)},
+            "chunked": {"prefill_s": round(chunked_s, 4),
+                        "tok_s": round(sl / chunked_s, 1)},
+            "ratio_dense_over_chunked": round(ratio, 3),
+            "greedy_equal": True,
+        }
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"prefill_paged_bench,wrote,{args.out}")
+    return ratio
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,10 @@ def main() -> None:
     from benchmarks import prefix_cache_bench
     prefix_cache_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Chunked prefill — flash-prefill kernel vs dense one-shot")
+    from benchmarks import prefill_paged_bench
+    prefill_paged_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

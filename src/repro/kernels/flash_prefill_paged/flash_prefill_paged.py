@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: paged chunked-prefill attention with Softermax.
+
+The prefill-side sibling of ``kernels/flash_decode_paged``: a *tile* of
+suffix queries (one chunk of a long prompt, at absolute positions
+``pos0 .. pos0+Sq-1``) attends directly against block-table-resident KV —
+the cached prefix plus the chunk's own freshly scattered rows — with the
+paper's Unnormed-Softmax-Unit recurrence carrying the running (IntMax,
+denominator, accumulator) triple across KV tiles. Because every Softermax
+rescale is an exact power-of-two exponent add, the physical blocks can be
+streamed in table order with no pre-pass and no gather: the online state
+*is* the carry, which is what makes chunked prefill free for this layout —
+across chunk boundaries nothing needs to be handed over, the earlier
+chunks' contribution lives in the pool and the recurrence is order-free.
+
+Layout (same conventions as the decode kernel):
+
+* KV is the pool ``(N, Hkv, BS, D)``; ``block_tables`` holds each
+  sequence's physical block ids in *logical* order, so the key at logical
+  position ``p`` lives at ``pool[table[p // BS], :, p % BS]``.
+* The table is a scalar-prefetch operand: the KV BlockSpec index map does
+  the gather, DMAing one physical block per kv grid step into VMEM.
+* Grid ``(B*Hq, nq, W)``; the kv axis is sequential and scratch carries
+  (m, d, acc) across it. Causality is positional: column ``j*BS + r`` is
+  valid for query row ``pos0 + i*BQ + s`` iff ``col <= row`` — this one
+  mask covers the all-valid prefix columns, the in-chunk triangle, and the
+  not-yet-written tail rows of the last block alike. KV tiles entirely
+  above the diagonal of a query tile are skipped (prefix tiles are the
+  workload and are never skippable).
+
+Query rows past the true chunk length are padding: every score they keep
+is finite (column 0 is always causally valid), so they produce garbage-
+but-finite output rows the caller slices off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+from repro.core.numerics import NEG_INF
+
+
+def _paged_prefill_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                          acc_scr, m_scr, d_scr, *, intmax: bool,
+                          block_q: int, block_size: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        d_scr[...] = jnp.zeros_like(d_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = pos_ref[0, 0] + i * block_q     # absolute pos of q row 0
+    k_start = j * block_size                  # logical pos of kv row 0
+
+    @pl.when(k_start <= q_start + block_q - 1)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (BS, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (BQ, BS)
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj <= qi, s, NEG_INF)
+        m_prev = m_scr[...]
+        # IntMax via ceil-after-reduce (ceil is monotone, so this equals
+        # max(ceil(s)) with a (BQ, 1) ceil instead of a (BQ, BS) pass)
+        sm = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, jnp.ceil(sm) if intmax else sm)
+        alpha = jnp.exp2(m_prev - m_new)              # exact power-of-two
+        p = jnp.exp2(s - m_new)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d_scr[...] = d_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        d = d_scr[...]
+        recip = jnp.where(d > 0, 1.0 / jnp.where(d > 0, d, 1.0), 0.0)
+        o_ref[0] = (acc_scr[...] * recip).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("intmax", "block_q", "interpret"))
+def flash_prefill_paged(
+    q: jax.Array,             # (B, Hq, Sq, D) pre-scaled chunk queries
+    k_pool: jax.Array,        # (N, Hkv, BS, D) physical block pool
+    v_pool: jax.Array,        # (N, Hkv, BS, D)
+    block_tables: jax.Array,  # (B, W) int32, logical order; must cover every
+    #                           position <= pos0 + Sq - 1
+    q_pos0: jax.Array,        # (B,) int32 absolute position of q[:, :, 0]
+    *,
+    intmax: bool = True,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    N, Hkv, BS, _ = k_pool.shape
+    W = block_tables.shape[1]
+    group = Hq // Hkv
+
+    block_q = min(block_q, Sq)
+    pq = (-Sq) % block_q
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    Sqp = Sq + pq
+    nq = Sqp // block_q
+
+    qf = qp.reshape(B * Hq, Sqp, D)
+    pos = q_pos0.astype(jnp.int32).reshape(B, 1)
+    bt = block_tables.astype(jnp.int32)
+
+    def kv_map(bh, i, j, bt_ref):
+        return (bt_ref[bh // Hq, j], (bh % Hq) // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hq, nq, W),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, i, j, bt_ref: (bh // Hq, 0)),
+            pl.BlockSpec((1, block_q, D),
+                         lambda bh, i, j, bt_ref: (bh, i, 0)),
+            pl.BlockSpec((1, 1, BS, D), kv_map),
+            pl.BlockSpec((1, 1, BS, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, i, j, bt_ref: (bh, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, intmax=intmax,
+                          block_q=block_q, block_size=BS),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(bt, pos, qf, k_pool, v_pool)
+
+    return out.reshape(B, Hq, Sqp, D)[:, :, :Sq, :]

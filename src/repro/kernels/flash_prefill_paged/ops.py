@@ -1,0 +1,49 @@
+"""Backend dispatch for paged chunked-prefill attention.
+
+Single dispatcher for every caller (the serving engine's chunk step routes
+here too):
+
+* TPU backend          — the compiled Pallas kernel (scalar-prefetch gather).
+* ``interpret=True``   — the same kernel under the Pallas interpreter (CPU
+  CI exercises the exact kernel dataflow this way).
+* anywhere else        — pure JAX: the gather oracle ``paged_prefill_ref``,
+  or the faster ``paged_prefill_split_ref`` when the caller passes
+  ``split_tail_blocks`` (promising that the table width honors the split
+  contract — exact cover or chunk-quantized; see ref.py). Identical math
+  either way, so CPU serving stays fast (the interpreter is orders of
+  magnitude slower than XLA on the same shapes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_prefill_paged.flash_prefill_paged import (
+    flash_prefill_paged)
+from repro.kernels.flash_prefill_paged.ref import (paged_prefill_ref,
+                                                   paged_prefill_split_ref)
+
+
+def flash_prefill_paged_op(q, k_pool, v_pool, block_tables, q_pos0, *,
+                           intmax: bool = True,
+                           interpret: bool = False,
+                           split_tail_blocks: Optional[int] = None
+                           ) -> jax.Array:
+    if interpret:
+        return flash_prefill_paged(q, k_pool, v_pool, block_tables, q_pos0,
+                                   intmax=intmax, interpret=True)
+    if jax.default_backend() == "tpu":
+        return flash_prefill_paged(q, k_pool, v_pool, block_tables, q_pos0,
+                                   intmax=intmax)
+    if split_tail_blocks is not None:
+        return paged_prefill_split_ref(q, k_pool, v_pool, block_tables,
+                                       q_pos0,
+                                       tail_blocks=split_tail_blocks,
+                                       intmax=intmax)
+    return paged_prefill_ref(q, k_pool, v_pool, block_tables, q_pos0,
+                             intmax=intmax)
+
+
+__all__ = ["flash_prefill_paged_op", "flash_prefill_paged",
+           "paged_prefill_ref", "paged_prefill_split_ref"]

@@ -45,6 +45,13 @@ def main() -> None:
     ap.add_argument("--evict-policy", choices=("lru", "fifo"), default="lru",
                     help="prefix cache: order in which unreferenced cached "
                          "blocks are reclaimed")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged engine: prefill long prompts this many "
+                         "tokens per step through the flash-prefill kernel "
+                         "(rounded up to a block multiple; chunks "
+                         "interleave with decode steps so long prompts "
+                         "don't stall running requests; 0 = one-shot "
+                         "prefill)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -74,7 +81,8 @@ def main() -> None:
                 num_blocks=args.num_blocks, max_batch=args.batch,
                 max_len=args.prompt_len + args.max_new,
                 prefix_cache=args.prefix_cache,
-                evict_policy=args.evict_policy)
+                evict_policy=args.evict_policy,
+                prefill_chunk=args.prefill_chunk)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
                        for p in prompts]
@@ -85,6 +93,11 @@ def main() -> None:
                      eng.metrics.peak_blocks,
                      100.0 * eng.metrics.peak_blocks / args.num_blocks,
                      args.num_blocks, eng.metrics.preemptions)
+            if args.prefill_chunk:
+                log.info("chunked prefill[%d]: %d chunks over %d prefills "
+                         "(%d prompt tokens computed)",
+                         eng.prefill_chunk, eng.metrics.prefill_chunks,
+                         eng.metrics.prefills, eng.metrics.prefill_tokens)
             if eng.prefix_cache is not None:
                 cs = eng.prefix_cache.stats
                 log.info("prefix cache[%s]: hit %d/%d prompt tokens "

@@ -23,7 +23,13 @@ Two engines share the model zoo and the softermax sampling head:
   default) shares prompt-prefix KV blocks between requests: admission
   charges only the uncached suffix, prefill runs offset-aware from the
   first uncached token, and finished requests release their prompt blocks
-  back to the tree. ``submit()``
+  — and their drained generated tokens — back to the tree, so multi-turn
+  conversations readmit as near-full hits. With ``prefill_chunk > 0`` long
+  prompts prefill in fixed-size chunks through the flash-prefill kernel
+  (``kernels/flash_prefill_paged``): one chunk per request per step,
+  interleaved with decode steps, each chunk attending the cached prefix
+  and every earlier chunk directly out of the pool — no quadratic one-shot
+  score matrix, no per-layer prefix gather. ``submit()``
   enqueues, ``step()`` advances the world one iteration and reports freshly
   decoded tokens per request (streaming), ``run()`` drives to completion and
   returns per-request results plus throughput/latency metrics.
@@ -48,10 +54,11 @@ from repro.core.softermax import softmax_base2
 from repro.models.registry import model_fns
 from repro.serve.kv_pool import PagedKVCache
 from repro.serve.paged_step import (check_paged_support, paged_decode_step,
-                                    paged_prefill, paged_prefill_suffix,
-                                    scatter_prefill, scatter_prefill_offset)
+                                    paged_prefill, paged_prefill_chunked,
+                                    paged_prefill_suffix, scatter_prefill,
+                                    scatter_prefill_offset)
 from repro.serve.radix_cache import RadixCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import PREFILL, Request, Scheduler
 
 
 def sample_tokens(lg: jax.Array, key, temperature: float,
@@ -120,6 +127,7 @@ class EngineMetrics:
     steps: int = 0
     decode_steps: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0      # chunked-prefill model steps run
     preemptions: int = 0
     tokens_out: int = 0          # tokens sampled (includes later-discarded)
     tokens_discarded: int = 0    # sampled but thrown away by preemption
@@ -153,7 +161,8 @@ class ContinuousEngine:
                  block_size: int = 16, num_blocks: int = 128,
                  max_batch: int = 8, max_len: int = 512,
                  max_admit_per_step: int = 2, seed: int = 0,
-                 prefix_cache: bool = True, evict_policy: str = "lru"):
+                 prefix_cache: bool = True, evict_policy: str = "lru",
+                 prefill_chunk: int = 0):
         check_paged_support(cfg)
         self.cfg = cfg
         if cfg.opt_bf16_params:
@@ -164,6 +173,17 @@ class ContinuousEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.max_admit_per_step = max_admit_per_step
+        # Chunked prefill: long prompts are computed ``prefill_chunk``
+        # tokens at a time through the flash-prefill kernel (one chunk per
+        # prefilling request per step, interleaved with decode steps).
+        # 0 disables it — prompts prefill in one shot as before. The chunk
+        # is rounded up to a block multiple so chunk boundaries and block
+        # boundaries line up and every non-final chunk scatters whole rows.
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, "
+                             f"got {prefill_chunk}")
+        self.prefill_chunk = (-(-prefill_chunk // block_size) * block_size
+                              if prefill_chunk else 0)
         self.pool = PagedKVCache(cfg, num_blocks, block_size)
         self.prefix_cache = (RadixCache(self.pool, evict_policy)
                              if prefix_cache else None)
@@ -204,9 +224,17 @@ class ContinuousEngine:
             return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
                 lg, ks, vs
 
+        def _prefill_chunk_fn(p, t, pos0, last_rel, kp, vp, pt, blk, off):
+            lg, k, v = paged_prefill_chunked(p, t, pos0, last_rel, kp, vp,
+                                             pt, blk, off, cfg)
+            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
+                lg, k, v
+
         donate = jax.default_backend() != "cpu"
         self._prefill = jax.jit(_prefill_fn)
         self._prefill_suffix = jax.jit(_prefill_suffix_fn)
+        self._prefill_chunk_fn = jax.jit(
+            _prefill_chunk_fn, donate_argnums=(4, 5) if donate else ())
         self._scatter = jax.jit(scatter_prefill,
                                 donate_argnums=(0, 1) if donate else ())
         self._scatter_off = jax.jit(scatter_prefill_offset,
@@ -240,13 +268,30 @@ class ContinuousEngine:
                 "warmup() must run before any requests are submitted "
                 "(its synthetic workload would consume and discard them)")
         zeros = jnp.zeros
-        for nb in range(1, self.nb_max + 1):
-            Sp = nb * self.block_size
-            _, _, ks, vs = self._prefill(
-                self.params, zeros((1, Sp), jnp.int32),
-                jnp.asarray([Sp - 1], jnp.int32))
-            self.pool.k, self.pool.v = self._scatter(
-                self.pool.k, self.pool.v, ks, vs, zeros((nb,), jnp.int32))
+        if self.prefill_chunk:
+            # chunked engines never run the one-shot step: compile the
+            # chunk step once per table-width bucket (all writes land in
+            # the reserved garbage block 0; inputs are shape-only — wide
+            # tables with pos0=0 break the split-path table contract, so
+            # outputs are garbage, but they are finite and discarded)
+            C = self.prefill_chunk
+            cq = C // self.block_size
+            for w in range(cq, self.nb_max + cq, cq):
+                _, _, self.pool.k, self.pool.v = self._prefill_chunk_fn(
+                    self.params, zeros((1, C), jnp.int32),
+                    jnp.asarray(0, jnp.int32),
+                    jnp.asarray([C - 1], jnp.int32),
+                    self.pool.k, self.pool.v, zeros((1, w), jnp.int32),
+                    zeros((C,), jnp.int32), zeros((C,), jnp.int32))
+        else:
+            for nb in range(1, self.nb_max + 1):
+                Sp = nb * self.block_size
+                _, _, ks, vs = self._prefill(
+                    self.params, zeros((1, Sp), jnp.int32),
+                    jnp.asarray([Sp - 1], jnp.int32))
+                self.pool.k, self.pool.v = self._scatter(
+                    self.pool.k, self.pool.v, ks, vs,
+                    zeros((nb,), jnp.int32))
         w = 1
         while True:
             w = min(w, self.nb_max)
@@ -282,18 +327,31 @@ class ContinuousEngine:
         self.pool.stats = PoolStats(self.pool.num_blocks)
 
     def step(self) -> Dict[int, List[int]]:
-        """Advance the world one iteration: admit+prefill, join, one fused
-        decode step, evict. Returns {req_id: fresh tokens} — only
-        temperature-sampled tokens appear here; greedy tokens stay on
-        device until ``drain()`` (``run(on_token=...)`` drains every step
-        for streaming)."""
+        """Advance the world one iteration: admit+prefill (one *chunk* per
+        prefilling request when chunked prefill is on — long prompts no
+        longer stall in-flight decodes), join, one fused decode step,
+        evict. Returns {req_id: fresh tokens} — temperature-sampled tokens
+        appear here each step; greedy tokens normally stay on device until
+        ``drain()`` (``run(on_token=...)`` drains every step for
+        streaming), EXCEPT that with a prefix cache attached (the default)
+        a step on which some request finishes drains the whole pipeline —
+        the finishing request's generated tokens are published to the
+        radix tree, which needs their values — so drained greedy tokens
+        land in that step's events."""
         t0 = time.time()
         events: Dict[int, List[int]] = {}
         self._sync_rows()
 
         admitted = self.sched.admit(self.max_admit_per_step)
-        for req in admitted:
-            self._do_prefill(req, events)
+        if self.prefill_chunk:
+            # admitted requests stay PREFILL; every prefilling request
+            # (this step's admissions and earlier ones) advances one chunk
+            for req in self.sched.prefilling:
+                self._do_prefill_chunk(req, events)
+        else:
+            for req in admitted:
+                self._do_prefill(req, events)
+        self._drain_if_finishing(events)
         self.sched.evict_finished()              # max_new == 1 requests
 
         before_discard = self.sched.tokens_discarded
@@ -302,8 +360,9 @@ class ContinuousEngine:
         self.metrics.tokens_discarded += \
             self.sched.tokens_discarded - before_discard
         self._sync_rows()
-        if self.sched.running:
+        if any(r.state != PREFILL for r in self.sched.running):
             self._do_decode_step(events)
+            self._drain_if_finishing(events)
             self.sched.evict_finished()
 
         self.metrics.steps += 1
@@ -336,6 +395,17 @@ class ContinuousEngine:
                     events.setdefault(req.req_id, []).append(tok)
         self._pending.clear()
         return events
+
+    def _drain_if_finishing(self, events: Dict[int, List[int]]) -> None:
+        """With a prefix cache attached, finished requests publish their
+        *generated* tokens to the radix tree — which needs the token
+        values. Materialize the async pipeline on steps where something is
+        about to finish (the sync is confined to those steps)."""
+        if self.prefix_cache is None or not self._pending:
+            return
+        if any(r.done for r in self.sched.running):
+            for rid, toks in self.drain().items():
+                events.setdefault(rid, []).extend(toks)
 
     def run(self, on_token: Optional[Callable[[int, List[int]], None]] = None
             ) -> Dict[int, Request]:
@@ -429,8 +499,64 @@ class ContinuousEngine:
             greedy, lg = self._prefill_from_offset(req, m)
         else:
             greedy, lg = self._prefill_full(req)
+        req.n_prefilled = plen
         self.metrics.prefill_tokens += plen - m
         self.metrics.prefix_hit_tokens += m
+        self._join_decode(req, greedy, lg, events)
+
+    def _do_prefill_chunk(self, req: Request,
+                          events: Dict[int, List[int]]) -> None:
+        """Advance one prefilling request by one chunk: compute + scatter
+        ``prefill_chunk`` prompt tokens through the flash-prefill step (the
+        chunk attends the cached prefix and every earlier chunk straight
+        out of the pool). The final chunk's last-token logits seed decoding
+        and the request joins the fused batch."""
+        bs = self.block_size
+        C = self.prefill_chunk
+        m, sl = self.sched.next_chunk(req, C)
+        if m == req.n_prefix_hit:        # first chunk of this admission
+            self.metrics.prefix_hit_tokens += m
+        tokens = np.zeros((1, C), np.int32)
+        tokens[0, :sl] = req.prompt[m:m + sl]
+        table = np.asarray(self.pool.blocks_of(req.req_id), np.int32)
+        cover = -(-(m + sl) // bs)       # blocks holding positions < m+sl
+        # chunk tables bucket to multiples of the chunk's own block count
+        # (not pow2): buckets stay bounded (nb_max / chunk-blocks of them)
+        # AND the pad never exceeds the masked tail region the CPU split
+        # path assumes — see paged_prefill_chunked's table contract
+        cq = C // bs
+        w = -(-cover // cq) * cq
+        pt = np.zeros((1, w), np.int32)
+        pt[0, :cover] = table[:cover]
+        pos = m + np.arange(C)
+        blk = np.zeros((C,), np.int32)   # pad rows -> garbage block 0
+        off = np.zeros((C,), np.int32)
+        blk[:sl] = table[pos[:sl] // bs]
+        off[:sl] = pos[:sl] % bs
+        greedy, lg, self.pool.k, self.pool.v = self._prefill_chunk_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(m, jnp.int32),
+            jnp.asarray([sl - 1], jnp.int32), self.pool.k, self.pool.v,
+            jnp.asarray(pt), jnp.asarray(blk), jnp.asarray(off))
+        req.n_prefilled = m + sl
+        self.metrics.prefill_tokens += sl
+        self.metrics.prefill_chunks += 1
+        if req.n_prefilled == req.prompt_len:
+            self._join_decode(req, greedy, lg, events)
+        elif self.prefix_cache is not None:
+            # publish completed chunks as they land (full blocks only: a
+            # partial tail donated mid-prefill would leave a stale
+            # second node on the same physical block once later chunks
+            # complete it) so requests admitted while this long prompt is
+            # still prefilling already share its prefix
+            full = (req.n_prefilled // bs) * bs
+            if full > 0:
+                self.prefix_cache.insert(req.req_id, req.prompt[:full])
+
+    def _join_decode(self, req: Request, greedy, lg,
+                     events: Dict[int, List[int]]) -> None:
+        """Prefill completed: publish the prompt to the prefix cache,
+        sample the first token from the final logits, and give the request
+        a stable decode row."""
         if self.prefix_cache is not None:
             # publish the freshly computed prompt blocks right away so
             # requests admitted next step share with this in-flight one

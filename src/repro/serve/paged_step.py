@@ -12,9 +12,23 @@ layout instead of a contiguous per-request cache:
   cache: only the *uncached* prompt suffix runs through the model (absolute
   positions ``pos0..``), with each layer's attention reading the cached
   prefix K/V straight out of the pool through the request's block table.
+  One shot: the whole suffix is a single dense attention, quadratic in the
+  suffix and linear in the prefix — fine for chat-sized prompts, the wrong
+  shape for long documents.
 * ``scatter_prefill_offset`` — place suffix K/V rows at arbitrary
   (block, row) coordinates: the suffix may start mid-block when a matched
   partial tail block was extended copy-on-write.
+* ``paged_prefill_chunked`` — one *chunk* of a long prompt (engine-driven
+  chunked prefill): per layer the chunk's K/V rows are scattered into the
+  pool first, then the chunk's queries attend the pool directly through
+  the block table (``kernels/flash_prefill_paged``) — cached prefix,
+  earlier chunks, and the chunk's own causal triangle are all one KV
+  source, so nothing is gathered-and-concatenated and no score matrix ever
+  exceeds (chunk, prefix+chunk). The online-normalization state is carried
+  across KV tiles inside the kernel; across chunk boundaries no state is
+  handed over at all — earlier chunks' contribution is pool-resident and
+  the Softermax recurrence is order-free, so re-attending it online is
+  exact.
 * ``paged_decode_step`` — one token for the whole running batch: per layer,
   write the new K/V row through the block table, then run paged Softermax
   decode attention over the pool. Inactive batch slots carry block table 0
@@ -38,6 +52,7 @@ from repro.core.numerics import NEG_INF
 from repro.kernels.flash_decode_paged import (flash_decode_paged,
                                               paged_decode_ref)
 from repro.kernels.flash_decode_paged.ref import gather_kv
+from repro.kernels.flash_prefill_paged import flash_prefill_paged_op
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import embed, logits, mlp, rmsnorm, rope
@@ -241,6 +256,101 @@ def scatter_prefill_offset(
             rows.astype(pool.dtype))
 
     return place(k_pool, ks), place(v_pool, vs)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (flash-prefill kernel over the block table)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax):
+    """Chunk queries over block-table-resident KV through the one shared
+    dispatcher: Pallas kernel on TPU / under ``cfg.interpret_kernels``;
+    elsewhere the pure-JAX split oracle, which skips the causal mask on
+    the provably-valid prefix bulk. Passing ``split_tail_blocks`` is safe
+    here because ``paged_prefill_chunked`` requires an exact-cover or
+    chunk-quantized table (see the contract in its signature)."""
+    BS = k_pool_l.shape[2]
+    tail = 2 * (-(-q.shape[2] // BS)) + 1
+    return flash_prefill_paged_op(q, k_pool_l, v_pool_l, table, pos0,
+                                  intmax=intmax,
+                                  interpret=cfg.interpret_kernels,
+                                  split_tail_blocks=tail)
+
+
+def paged_prefill_chunked(
+    params,
+    tokens: jax.Array,        # (1, C) one prompt chunk, right-padded
+    pos0: jax.Array,          # () int32 absolute position of tokens[:, 0]
+    last_rel: jax.Array,      # (1,) index of the chunk's true last token
+    k_pool: jax.Array,        # (L, N, Hkv, BS, Dh)
+    v_pool: jax.Array,
+    table: jax.Array,         # (1, W) physical blocks covering every
+    #                           position <= pos0 + C - 1 (logical order);
+    #                           W must be the exact cover
+    #                           ceil((pos0+C)/BS), or that cover rounded
+    #                           up to a multiple of ceil(C/BS) with pad
+    #                           entries = garbage block 0 (the CPU fast
+    #                           path skips causal masking on the leading
+    #                           blocks under exactly this guarantee)
+    blk: jax.Array,           # (C,) int32 physical block per chunk row
+    off: jax.Array,           # (C,) int32 row within that block
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a chunked prefill. Per layer: scatter the chunk's K/V
+    rows into the pool at (blk, off) — pad rows route to garbage block 0 —
+    then run chunk-queries-over-pool attention through ``table``. The
+    scatter comes *first*, so the attention sees [cached prefix ‖ earlier
+    chunks ‖ this chunk] as one logical KV stream and the positional causal
+    mask does the rest; the pool update (instead of a returned K/V stack)
+    is also what the next chunk of the same prompt resumes from.
+
+    Returns (chunk-last-token logits (1, V), new k_pool, new v_pool). The
+    logits matter only for the final chunk (they seed decoding); computing
+    them per chunk costs one (1, d) @ (d, V) matmul. ``pos0 == 0`` with a
+    chunk covering the whole prompt degenerates to ``paged_prefill``'s
+    math, which is what the chunked-vs-one-shot greedy-equality test pins.
+    """
+    B, C = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    dh = cfg.head_dim_
+    premult, intmax = attn_mod._mode(cfg)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
+                                        (B, C))
+    x = embed(params["embed"], tokens, cfg)
+    Hkv = cfg.n_kv_heads
+    h_idx = jnp.arange(Hkv)
+    qpos0 = jnp.broadcast_to(pos0, (B,)).astype(jnp.int32)
+
+    def body(x, xs):
+        bp, kp_l, vp_l = xs
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+        rows_k = jnp.swapaxes(k[0], 0, 1)             # (C, Hkv, Dh)
+        rows_v = jnp.swapaxes(v[0], 0, 1)
+        kp_l = kp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
+            rows_k.astype(kp_l.dtype))
+        vp_l = vp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
+            rows_v.astype(vp_l.dtype))
+        q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+        o = _chunk_attention(q, kp_l, vp_l, table, qpos0, cfg, intmax)
+        y = attn_mod._out_proj(bp["mixer"], o, cfg)
+        x = x + y
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        x = shard_act(x + f, ("batch", "seq", "act_embed"))
+        return x, (kp_l, vp_l)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["blocks"], k_pool,
+                                               v_pool))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x_last = jnp.take_along_axis(
+        x, last_rel[:, None, None].astype(jnp.int32), axis=1)  # (1, 1, d)
+    lg = logits(params["embed"], x_last, cfg)[:, 0]
+    return lg, new_k, new_v
 
 
 # ---------------------------------------------------------------------------

@@ -126,6 +126,14 @@ class RadixCache:
         self.evict_policy = evict_policy
         self.root = RadixNode((), 0, None, 0)
         self._held: Dict[int, List[RadixNode]] = {}   # req_id -> pinned path
+        # per-request publish cursor: (deepest full-block node inserted,
+        # tokens covered by it). Progressive chunked-prefill publishing
+        # calls insert() once per chunk with an ever-longer prefix of the
+        # same sequence; resuming from the cursor keeps the total publish
+        # work O(prompt) instead of O(prompt^2 / chunk). Cursor nodes are
+        # pinned by the same request, so eviction cannot invalidate them;
+        # release() drops the cursor with the pins.
+        self._cursor: Dict[int, Tuple[RadixNode, int]] = {}
         self._clock = 0
         self.stats = CacheStats()
 
@@ -164,7 +172,8 @@ class RadixCache:
     # -- matching ---------------------------------------------------------
 
     def _match(self, tokens: Sequence[int]) -> MatchResult:
-        toks = [int(t) for t in tokens]
+        toks = tokens.tolist() if isinstance(tokens, np.ndarray) else \
+            [int(t) for t in tokens]
         limit = len(toks) - 1       # always leave >= 1 token to recompute
         node, path, matched = self.root, [], 0
         while matched + self.bs <= limit:
@@ -286,21 +295,57 @@ class RadixCache:
 
     # -- publication ------------------------------------------------------
 
+    def _promote(self, node: RadixNode, block: int, new_key: Tuple[int, ...]
+                 ) -> Optional[RadixNode]:
+        """Re-key a child of ``node`` in place: a partial leaf of OURS that
+        already owns ``block`` (published before the block filled up) whose
+        key is a strict prefix of ``new_key`` — the missing rows have been
+        written since (later chunks / generated tokens), so extending the
+        key keeps one tree owner per physical block instead of donating a
+        duplicate. Returns the promoted node, or None if there is none."""
+        for ch in list(node.children.values()):
+            if ch.block == block and 0 < len(ch.key) < len(new_key) and \
+                    new_key[:len(ch.key)] == ch.key:
+                del node.children[ch.key]
+                ch.key = new_key
+                node.children[new_key] = ch
+                return ch
+        return None
+
     def insert(self, req_id: int, tokens: Sequence[int]) -> int:
         """Publish a freshly prefilled request's prompt blocks to the tree
         (full blocks as interior nodes, the partial prompt tail as a leaf)
         and pin its whole path. Chunks already cached keep the incumbent
         node — the request's duplicate block is simply not donated and
-        falls back to the free list at release. Returns blocks donated."""
-        toks = [int(t) for t in tokens]
+        falls back to the free list at release. Returns blocks donated.
+
+        Idempotent under re-insertion of a longer sequence (progressive
+        chunked-prefill publishing, generated tokens at finish): a shorter
+        partial-tail leaf of the same request is promoted in place rather
+        than double-owned, and the walk resumes from this request's
+        publish cursor — each call only converts and walks the tokens
+        beyond what it already published (callers always pass extensions
+        of their own earlier inserts: prefixes of [prompt ‖ reply])."""
+        n = len(tokens)
+        node, skip = self._cursor.get(req_id, (self.root, 0))
+        if skip > n:                     # defensive: never shrink
+            node, skip = self.root, 0
+        # np fast path: tolist() is C-speed; only the unpublished delta is
+        # converted, keeping progressive publishing O(prompt) overall
+        tail_toks = tokens[skip:]
+        toks = tail_toks.tolist() if isinstance(tail_toks, np.ndarray) \
+            else [int(t) for t in tail_toks]
         table = self.pool.blocks_of(req_id)
         held = self._held.setdefault(req_id, [])
         held_ids: Set[int] = {id(nd) for nd in held}
-        node, donated = self.root, 0
-        n_full = len(toks) // self.bs
-        for i in range(n_full):
-            chunk = tuple(toks[i * self.bs:(i + 1) * self.bs])
+        donated = 0
+        n_full = n // self.bs
+        skip_full = skip // self.bs      # cursor is always block-aligned
+        for i in range(skip_full, n_full):
+            chunk = tuple(toks[i * self.bs - skip:(i + 1) * self.bs - skip])
             child = node.children.get(chunk)
+            if child is None:
+                child = self._promote(node, table[i], chunk)
             if child is None:
                 child = RadixNode(chunk, table[i], node, self._tick())
                 node.children[chunk] = child
@@ -312,7 +357,8 @@ class RadixCache:
                 held.append(child)
                 held_ids.add(id(child))
             node = child
-        tail = tuple(toks[n_full * self.bs:])
+        self._cursor[req_id] = (node, n_full * self.bs)
+        tail = tuple(toks[n_full * self.bs - skip:])
         if tail:
             # any child (full block or partial) whose key extends the tail
             # already serves these rows — donating ours would cache them
@@ -321,12 +367,17 @@ class RadixCache:
                           ch.key[:len(tail)] == tail
                           for ch in node.children.values())
             if not covered:
-                leaf = RadixNode(tail, table[n_full], node, self._tick())
-                node.children[tail] = leaf
-                self.pool.incref(table[n_full])
-                donated += 1
-                leaf.ref += 1
-                held.append(leaf)
+                leaf = self._promote(node, table[n_full], tail)
+                if leaf is None:
+                    leaf = RadixNode(tail, table[n_full], node, self._tick())
+                    node.children[tail] = leaf
+                    self.pool.incref(table[n_full])
+                    donated += 1
+                self._touch(leaf)
+                if id(leaf) not in held_ids:
+                    leaf.ref += 1
+                    held.append(leaf)
+                    held_ids.add(id(leaf))
                 # drop now-redundant shorter partials nobody is using
                 # (housekeeping, not memory pressure: stats.evictions
                 # deliberately not bumped)
@@ -347,6 +398,7 @@ class RadixCache:
         list. Returns the number of blocks actually freed."""
         for nd in self._held.pop(req_id, []):
             nd.ref -= 1
+        self._cursor.pop(req_id, None)
         return self.pool.free(req_id)
 
     # -- eviction ---------------------------------------------------------
@@ -402,6 +454,7 @@ class RadixCache:
         synthetic workload's cache entries."""
         if self._held:
             raise RuntimeError("reset() with running requests still pinned")
+        self._cursor.clear()
         dropped = 0
         for nd in self._walk():
             self.pool.decref(nd.block)

@@ -21,7 +21,19 @@ With a ``RadixCache`` attached, admission charges a request only for the
 tree by reference — and cache-evictable blocks count toward the admission
 budget. On finish/preempt the request's prompt blocks are released back to
 the tree (they were published to it right after prefill) instead of being
-freed outright.
+freed outright; on finish the *generated* tokens whose values the engine
+has drained are published too, so a follow-up turn that extends the whole
+conversation (prompt + reply) readmits as a near-full cache hit.
+
+**Chunked prefill.** When the engine runs with a prefill chunk size, an
+admitted request stays in PREFILL across several steps: ``next_chunk``
+deals out fixed-size chunks of the uncached prompt remainder (the last one
+ragged), the engine computes/scatters one chunk per request per step, and
+``prefilling`` lists the requests mid-prefill. Block accounting is
+unchanged — admission already allocated the whole prompt's blocks — but
+``ensure_decode_blocks`` must not grow tables for requests that are still
+prefilling (their ``n_cached`` counts scattered prompt rows, not decode
+growth).
 """
 from __future__ import annotations
 
@@ -55,6 +67,9 @@ class Request:
     n_prefix_hit: int = 0            # prompt tokens reused from the radix
                                      # tree at this admission (prefill skips
                                      # them)
+    n_prefilled: int = 0             # prompt tokens resident in the pool
+                                     # (cache hit + chunks computed so far;
+                                     # == prompt_len once prefill completes)
     epoch: int = 0                   # bumped on preemption: stale in-flight
                                      # token vectors are discarded by epoch
     n_preemptions: int = 0
@@ -183,10 +198,33 @@ class Scheduler:
             self._reserved[nxt.req_id] = total - need
             nxt.state = PREFILL
             nxt.n_prefix_hit = hit
+            nxt.n_prefilled = hit
             nxt.n_cached = plen
             admitted.append(nxt)
             self.running.append(nxt)
         return admitted
+
+    # -- chunked prefill --------------------------------------------------
+
+    @property
+    def prefilling(self) -> List[Request]:
+        """Running requests still mid-prefill (chunked mode), oldest
+        first."""
+        return [r for r in self.running if r.state == PREFILL]
+
+    def next_chunk(self, req: Request, chunk_tokens: int):
+        """Deal the next prefill chunk of ``req``: returns ``(start, n)``
+        token coordinates into the prompt (``start`` = first uncached,
+        not-yet-computed position; ``n <= chunk_tokens``, ragged only for
+        the final chunk). The caller computes + scatters the chunk and
+        then advances ``req.n_prefilled`` by ``n``. A PREFILL-state
+        request always has uncached tokens left (cache hits are capped at
+        ``prompt_len - 1`` and completion flips the state), so ``n >= 1``
+        — asserted rather than signalled."""
+        start = req.n_prefilled
+        n = min(chunk_tokens, req.prompt_len - start)
+        assert n > 0, f"request {req.req_id}: no prompt left to prefill"
+        return start, n
 
     # -- decode-time block growth / preemption ----------------------------
 
@@ -198,6 +236,9 @@ class Scheduler:
         for req in list(self.running):   # admission order = oldest first
             if req not in self.running:
                 continue                 # already preempted below
+            if req.state != DECODING:
+                continue                 # mid-chunked-prefill: the prompt's
+                #                          blocks were allocated at admission
             bs = self.pool.block_size
             if req.n_cached % bs != 0:
                 continue                 # room in the last block
@@ -250,6 +291,7 @@ class Scheduler:
         req.n_generated = 0
         req.n_cached = 0
         req.n_prefix_hit = 0
+        req.n_prefilled = 0
         req.epoch += 1
         req.n_preemptions += 1
         self.n_preemptions += 1
@@ -260,6 +302,7 @@ class Scheduler:
     def evict_finished(self) -> List[Request]:
         done = [r for r in self.running if r.done]
         for req in done:
+            self._publish_generated(req)
             self._release(req)
             self._reserved.pop(req.req_id, None)
             self.running.remove(req)
@@ -267,3 +310,22 @@ class Scheduler:
             req.t_finish = time.time()
             self.finished[req.req_id] = req
         return done
+
+    def _publish_generated(self, req: Request) -> None:
+        """Multi-turn reuse: before a finished request's blocks go back,
+        publish its *generated* tokens to the tree too (the prompt was
+        already published at prefill). The KV rows for the first
+        ``n_cached - prompt_len`` generated tokens are pool-resident (the
+        final sampled token was never fed back), so a follow-up prompt that
+        extends [prompt ‖ reply] readmits as a near-full cache hit. Needs
+        the token *values*: the engine drains the async pipeline before
+        evicting finished requests whenever a cache is attached; if values
+        are missing anyway (direct scheduler use), only the already-
+        published prompt stays cached."""
+        if self.cache is None or req.n_cached <= req.prompt_len:
+            return
+        n_gen_cached = req.n_cached - req.prompt_len
+        if len(req.tokens) < n_gen_cached:
+            return                       # values not materialized — skip
+        self.cache.insert(req.req_id, np.concatenate(
+            [req.prompt, np.asarray(req.tokens[:n_gen_cached], np.int32)]))

@@ -8,3 +8,23 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip Pallas *compiled* paths cleanly when no TPU backend is present.
+
+    Tests marked ``tpu`` exercise the compiled kernels themselves; off-TPU
+    they are skipped (not failed) — the same kernel dataflow still runs in
+    CI through ``interpret=True``, and the serving dispatch falls back to
+    the pure-JAX refs (``tests/test_prefill_paged.py`` asserts both
+    fallbacks agree with the oracle, so a CPU-only box still validates the
+    kernel math end to end)."""
+    import jax
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(
+        reason="no TPU backend: compiled Pallas paths run only on TPU "
+               "(interpret-mode fallback is asserted separately)")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip)

@@ -106,6 +106,8 @@ class TestScheduler:
         assert s.pool.num_free == 2          # but both are spoken for
         assert [r.req_id for r in s.waiting] == [r3.req_id]
         # growth draws down the reservation, never the safety net
+        # (requests grow only once prefill completed and they joined decode)
+        r1.state = r2.state = "decoding"
         r1.n_cached = r2.n_cached = 8
         assert s.ensure_decode_blocks() == []
         assert s.pool.num_free == 0
@@ -119,6 +121,7 @@ class TestScheduler:
         r1 = s.submit(self._prompt(8), 8)
         r2 = s.submit(self._prompt(8), 8)
         s.admit()
+        r1.state = r2.state = "decoding"     # prefilled + joined the batch
         r1.tokens.append(1), r2.tokens.append(1)
         r1.n_generated = r2.n_generated = 1
         r1.n_cached = r2.n_cached = 8
