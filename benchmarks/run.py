@@ -50,6 +50,10 @@ def main() -> None:
     from benchmarks import prefill_paged_bench
     prefill_paged_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Int8 KV pool — equal-HBM capacity + throughput vs bf16")
+    from benchmarks import kv_int8_bench
+    kv_int8_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

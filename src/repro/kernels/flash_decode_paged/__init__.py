@@ -1,7 +1,9 @@
 from repro.kernels.flash_decode_paged.flash_decode_paged import (
     flash_decode_paged)
 from repro.kernels.flash_decode_paged.ops import flash_decode_paged_op
-from repro.kernels.flash_decode_paged.ref import gather_kv, paged_decode_ref
+from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
+                                                  gather_kv_dequant,
+                                                  paged_decode_ref)
 
 __all__ = ["flash_decode_paged", "flash_decode_paged_op", "paged_decode_ref",
-           "gather_kv"]
+           "gather_kv", "gather_scales", "gather_kv_dequant"]

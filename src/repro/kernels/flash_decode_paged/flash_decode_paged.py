@@ -14,6 +14,18 @@ index map performs the gather — each grid step DMAs one physical block from
 the pool directly into VMEM. Grid: ``(B*Hq, blocks_per_seq)``; the kv axis is
 sequential and scratch carries (m, d, acc) across it.
 
+**Fused int8 dequant-on-gather.** With ``k_scale``/``v_scale`` (per-row f32
+scales, block-indexed like the pool) the K/V pools are int8: the HBM→VMEM
+DMA moves half the bytes, and dequantization is fused *after* the matmuls
+instead of widening the tiles — ``S = q·Kᵀ`` against the raw int8 codes
+then ``S *= k_scale`` per column (exact: the scale is a per-row constant of
+K), and ``p *= v_scale`` before ``p·V`` (same identity on the V side). Both
+rescales touch the (1, BS) score row, not the (BS, D) tile, so the dequant
+cost is O(BS) per block while the accumulate stays fp32 — the paper's
+int-storage / wide-accumulate split applied to the KV side. TPU tiling
+note: int8 VMEM tiles are (32, 128)-granular (vs (16, 128) for bf16), so
+int8 pools waste no sublane padding when ``block_size >= 32``.
+
 Table entries past a sequence's length may be garbage (the pool's reserved
 block 0): the length mask zeroes their contribution and the gather of block 0
 is a wasted-but-harmless DMA.
@@ -32,9 +44,12 @@ from repro.kernels.compat import CompilerParams
 from repro.core.numerics import NEG_INF
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_scr, m_scr, d_scr, *, intmax: bool,
-                         block_size: int):
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         intmax: bool, block_size: int, quantized: bool):
+    if quantized:
+        ksc_ref, vsc_ref, o_ref, acc_scr, m_scr, d_scr = rest
+    else:
+        o_ref, acc_scr, m_scr, d_scr = rest
     j = pl.program_id(1)
     nb = pl.num_programs(1)
 
@@ -55,6 +70,11 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)       # (1, BS)
+        if quantized:
+            # dequant fused post-dot: k_scale is constant per K row, so
+            # scaling the (1, BS) score column-wise equals scaling the
+            # (BS, D) tile — for a fraction of the flops
+            s = s * ksc_ref[0, 0]                     # (1, BS)
         kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(kj < kv_len, s, NEG_INF)
         m_prev = m_scr[...]
@@ -62,8 +82,12 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         m_new = jnp.maximum(m_prev, jnp.max(sl, axis=1, keepdims=True))
         alpha = jnp.exp2(m_prev - m_new)              # exact power-of-two
         p = jnp.exp2(s - m_new)
+        if quantized:
+            pv = p * vsc_ref[0, 0]                    # fold v_scale into p
+        else:
+            pv = p
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
+            pv, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         d_scr[...] = d_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_scr[...] = m_new
@@ -83,6 +107,8 @@ def flash_decode_paged(
     block_tables: jax.Array,  # (B, nb) int32 physical block ids
     lengths: jax.Array,       # (B,) int32 valid cache lengths
     *,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32: int8 pools' row scales
+    v_scale: jax.Array = None,
     intmax: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
@@ -90,6 +116,7 @@ def flash_decode_paged(
     N, Hkv, BS, _ = k_pool.shape
     nb = block_tables.shape[1]
     group = Hq // Hkv
+    quantized = k_scale is not None
 
     qf = q.reshape(B * Hq, 1, D)
     lens = lengths.astype(jnp.int32).reshape(B, 1)
@@ -98,15 +125,25 @@ def flash_decode_paged(
     def kv_map(bh, j, bt_ref):
         return (bt_ref[bh // Hq, j], (bh % Hq) // group, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bh, j, bt_ref: (bh // Hq, 0)),
+        pl.BlockSpec((1, 1, D), lambda bh, j, bt_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, 1, BS, D), kv_map),
+        pl.BlockSpec((1, 1, BS, D), kv_map),
+    ]
+    inputs = [lens, qf, k_pool, v_pool]
+    if quantized:
+        # scales ride the same scalar-prefetch gather as the values; the
+        # trailing unit axis keeps in-kernel reads 2-D (TPU-friendly)
+        in_specs += [pl.BlockSpec((1, 1, 1, BS), kv_map),
+                     pl.BlockSpec((1, 1, 1, BS), kv_map)]
+        inputs += [k_scale.astype(jnp.float32).reshape(N, Hkv, 1, BS),
+                   v_scale.astype(jnp.float32).reshape(N, Hkv, 1, BS)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B * Hq, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda bh, j, bt_ref: (bh // Hq, 0)),
-            pl.BlockSpec((1, 1, D), lambda bh, j, bt_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, 1, BS, D), kv_map),
-            pl.BlockSpec((1, 1, BS, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, D), lambda bh, j, bt_ref: (bh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, D), jnp.float32),
@@ -117,13 +154,13 @@ def flash_decode_paged(
 
     out = pl.pallas_call(
         functools.partial(_paged_decode_kernel, intmax=intmax,
-                          block_size=BS),
+                          block_size=BS, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(bt, lens, qf, k_pool, v_pool)
+    )(bt, *inputs)
 
     return out.reshape(B, Hq, D)

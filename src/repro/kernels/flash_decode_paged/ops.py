@@ -5,14 +5,19 @@ import jax
 
 from repro.kernels.flash_decode_paged.flash_decode_paged import (
     flash_decode_paged)
-from repro.kernels.flash_decode_paged.ref import gather_kv, paged_decode_ref
+from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
+                                                  gather_kv_dequant,
+                                                  paged_decode_ref)
 
 
 def flash_decode_paged_op(q, k_pool, v_pool, block_tables, lengths, *,
+                          k_scale=None, v_scale=None,
                           intmax: bool = True,
                           interpret: bool = False) -> jax.Array:
     return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                              k_scale=k_scale, v_scale=v_scale,
                               intmax=intmax, interpret=interpret)
 
 
-__all__ = ["flash_decode_paged_op", "paged_decode_ref", "gather_kv"]
+__all__ = ["flash_decode_paged_op", "paged_decode_ref", "gather_kv",
+           "gather_scales", "gather_kv_dequant"]

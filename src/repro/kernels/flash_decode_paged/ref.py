@@ -24,6 +24,27 @@ def gather_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     return g.reshape(B, Hkv, nb * BS, D)
 
 
+def gather_scales(scales: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(N, Hkv, BS) scale pool + (B, nb) table -> (B, Hkv, nb*BS)."""
+    B, nb = block_tables.shape
+    _, Hkv, BS = scales.shape
+    g = scales[block_tables]                  # (B, nb, Hkv, BS)
+    g = jnp.moveaxis(g, 2, 1)
+    return g.reshape(B, Hkv, nb * BS)
+
+
+def gather_kv_dequant(pool: jax.Array, scales, block_tables: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Gather + (optional) int8 dequant: the pure-JAX mirror of the
+    kernels' fused dequant-on-gather. ``scales=None`` is the plain path."""
+    g = gather_kv(pool, block_tables)
+    if scales is None:
+        return g
+    s = gather_scales(scales, block_tables)
+    return (g.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
 def paged_decode_ref(
     q: jax.Array,             # (B, Hq, D) pre-scaled
     k_pool: jax.Array,        # (N, Hkv, BS, D)
@@ -31,8 +52,10 @@ def paged_decode_ref(
     block_tables: jax.Array,  # (B, nb) int32
     lengths: jax.Array,       # (B,) int32
     *,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
     intmax: bool = True,
 ) -> jax.Array:
-    k = gather_kv(k_pool, block_tables)
-    v = gather_kv(v_pool, block_tables)
+    k = gather_kv_dequant(k_pool, k_scale, block_tables)
+    v = gather_kv_dequant(v_pool, v_scale, block_tables)
     return decode_ref(q, k, v, lengths, intmax=intmax)

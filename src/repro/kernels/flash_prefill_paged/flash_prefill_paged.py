@@ -30,6 +30,14 @@ Layout (same conventions as the decode kernel):
 Query rows past the true chunk length are padding: every score they keep
 is finite (column 0 is always causally valid), so they produce garbage-
 but-finite output rows the caller slices off.
+
+**Fused int8 dequant-on-gather.** With ``k_scale``/``v_scale`` (per-row
+f32 scales, block-indexed like the pools) the K/V pools are int8: the
+gather DMA moves half the bytes and dequantization folds into the score
+row — ``S *= k_scale`` per column after the QK dot, ``p *= v_scale``
+before the AV dot (both exact; a scale is constant along its K/V row).
+The rescales are O(BQ·BS) where widening the tiles would be O(BS·D), and
+the accumulator stays fp32 either way.
 """
 from __future__ import annotations
 
@@ -45,9 +53,13 @@ from repro.kernels.compat import CompilerParams
 from repro.core.numerics import NEG_INF
 
 
-def _paged_prefill_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                          acc_scr, m_scr, d_scr, *, intmax: bool,
-                          block_q: int, block_size: int):
+def _paged_prefill_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                          intmax: bool, block_q: int, block_size: int,
+                          quantized: bool):
+    if quantized:
+        ksc_ref, vsc_ref, o_ref, acc_scr, m_scr, d_scr = rest
+    else:
+        o_ref, acc_scr, m_scr, d_scr = rest
     i, j = pl.program_id(1), pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -68,6 +80,10 @@ def _paged_prefill_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)       # (BQ, BS)
+        if quantized:
+            # k_scale is constant per K row: scaling the score columns is
+            # the exact dequant, for O(BQ·BS) instead of O(BS·D) work
+            s = s * ksc_ref[0, 0]                     # (1, BS) broadcast
         qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(kj <= qi, s, NEG_INF)
@@ -78,8 +94,9 @@ def _paged_prefill_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         m_new = jnp.maximum(m_prev, jnp.ceil(sm) if intmax else sm)
         alpha = jnp.exp2(m_prev - m_new)              # exact power-of-two
         p = jnp.exp2(s - m_new)
+        pv = p * vsc_ref[0, 0] if quantized else p    # fold v_scale into p
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
+            pv, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         d_scr[...] = d_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_scr[...] = m_new
@@ -101,6 +118,8 @@ def flash_prefill_paged(
     #                           position <= pos0 + Sq - 1
     q_pos0: jax.Array,        # (B,) int32 absolute position of q[:, :, 0]
     *,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32: int8 pools' row scales
+    v_scale: jax.Array = None,
     intmax: bool = True,
     block_q: int = 128,
     interpret: bool = False,
@@ -109,6 +128,7 @@ def flash_prefill_paged(
     N, Hkv, BS, _ = k_pool.shape
     W = block_tables.shape[1]
     group = Hq // Hkv
+    quantized = k_scale is not None
 
     block_q = min(block_q, Sq)
     pq = (-Sq) % block_q
@@ -123,16 +143,26 @@ def flash_prefill_paged(
     def kv_map(bh, i, j, bt_ref):
         return (bt_ref[bh // Hq, j], (bh % Hq) // group, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bh, i, j, bt_ref: (bh // Hq, 0)),
+        pl.BlockSpec((1, block_q, D),
+                     lambda bh, i, j, bt_ref: (bh, i, 0)),
+        pl.BlockSpec((1, 1, BS, D), kv_map),
+        pl.BlockSpec((1, 1, BS, D), kv_map),
+    ]
+    inputs = [pos, qf, k_pool, v_pool]
+    if quantized:
+        # scales ride the same scalar-prefetch gather as the values; the
+        # trailing unit axis keeps in-kernel reads 2-D (TPU-friendly)
+        in_specs += [pl.BlockSpec((1, 1, 1, BS), kv_map),
+                     pl.BlockSpec((1, 1, 1, BS), kv_map)]
+        inputs += [k_scale.astype(jnp.float32).reshape(N, Hkv, 1, BS),
+                   v_scale.astype(jnp.float32).reshape(N, Hkv, 1, BS)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B * Hq, nq, W),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda bh, i, j, bt_ref: (bh // Hq, 0)),
-            pl.BlockSpec((1, block_q, D),
-                         lambda bh, i, j, bt_ref: (bh, i, 0)),
-            pl.BlockSpec((1, 1, BS, D), kv_map),
-            pl.BlockSpec((1, 1, BS, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, D),
                                lambda bh, i, j, bt_ref: (bh, i, 0)),
         scratch_shapes=[
@@ -144,13 +174,14 @@ def flash_prefill_paged(
 
     out = pl.pallas_call(
         functools.partial(_paged_prefill_kernel, intmax=intmax,
-                          block_q=block_q, block_size=BS),
+                          block_q=block_q, block_size=BS,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, D), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(bt, pos, qf, k_pool, v_pool)
+    )(bt, *inputs)
 
     return out.reshape(B, Hq, Sqp, D)[:, :, :Sq, :]

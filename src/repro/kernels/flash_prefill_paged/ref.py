@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.numerics import NEG_INF
-from repro.kernels.flash_decode_paged.ref import gather_kv
+from repro.kernels.flash_decode_paged.ref import gather_kv_dequant
 
 
 def paged_prefill_ref(
@@ -33,13 +33,15 @@ def paged_prefill_ref(
     block_tables: jax.Array,  # (B, W) int32, logical order
     q_pos0: jax.Array,        # (B,) int32 absolute position of q[:, :, 0]
     *,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
     intmax: bool = True,
 ) -> jax.Array:
     B, Hq, Sq, D = q.shape
     _, Hkv, BS, _ = k_pool.shape
     group = Hq // Hkv
-    k = gather_kv(k_pool, block_tables)       # (B, Hkv, W*BS, D)
-    v = gather_kv(v_pool, block_tables)
+    k = gather_kv_dequant(k_pool, k_scale, block_tables)  # (B,Hkv,W*BS,D)
+    v = gather_kv_dequant(v_pool, v_scale, block_tables)
     K = k.shape[2]
     qg = q.reshape(B, Hkv, group, Sq, D)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
@@ -69,6 +71,8 @@ def paged_prefill_split_ref(
     q_pos0: jax.Array,        # (B,) int32 absolute position of q[:, :, 0]
     *,
     tail_blocks: int,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
     intmax: bool = True,
 ) -> jax.Array:
     """CPU serving fast path: same attention as ``paged_prefill_ref``, but
@@ -97,16 +101,16 @@ def paged_prefill_split_ref(
     qg = q.reshape(B, Hkv, group, Sq, D).astype(jnp.float32)
     qi = q_pos0.astype(jnp.int32)[:, None] + jnp.arange(Sq)[None, :]
 
-    k2 = gather_kv(k_pool, block_tables[:, W - t:])
-    v2 = gather_kv(v_pool, block_tables[:, W - t:])
+    k2 = gather_kv_dequant(k_pool, k_scale, block_tables[:, W - t:])
+    v2 = gather_kv_dequant(v_pool, v_scale, block_tables[:, W - t:])
     s2 = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k2.astype(jnp.float32))
     kj = (W - t) * BS + jnp.arange(t * BS, dtype=jnp.int32)
     valid = kj[None, None, :] <= qi[:, :, None]            # (B, Sq, t*BS)
     s2 = jnp.where(valid[:, None, None, :, :], s2, NEG_INF)
     m = jnp.max(s2, axis=-1, keepdims=True)
     if W > t:
-        k1 = gather_kv(k_pool, block_tables[:, :W - t])
-        v1 = gather_kv(v_pool, block_tables[:, :W - t])
+        k1 = gather_kv_dequant(k_pool, k_scale, block_tables[:, :W - t])
+        v1 = gather_kv_dequant(v_pool, v_scale, block_tables[:, :W - t])
         s1 = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k1.astype(jnp.float32))
         m = jnp.maximum(m, jnp.max(s1, axis=-1, keepdims=True))
     m = jnp.ceil(m) if intmax else m

@@ -27,9 +27,14 @@ Two engines share the model zoo and the softermax sampling head:
   conversations readmit as near-full hits. With ``prefill_chunk > 0`` long
   prompts prefill in fixed-size chunks through the flash-prefill kernel
   (``kernels/flash_prefill_paged``): one chunk per request per step,
-  interleaved with decode steps, each chunk attending the cached prefix
-  and every earlier chunk directly out of the pool — no quadratic one-shot
-  score matrix, no per-layer prefix gather. ``submit()``
+  interleaved with decode steps (``prefill_budget`` caps the *total* chunk
+  tokens dealt per step across requests), each chunk attending the cached
+  prefix and every earlier chunk directly out of the pool — no quadratic
+  one-shot score matrix, no per-layer prefix gather. With
+  ``kv_dtype="int8"`` (the default when ``cfg.opt_int8_kv`` is set) the
+  pool stores K/V as int8 with per-row scales — half the gather bytes,
+  ~2x the tokens at equal HBM — quantizing on scatter and dequantizing
+  inside the paged kernels, fp32 accumulation throughout. ``submit()``
   enqueues, ``step()`` advances the world one iteration and reports freshly
   decoded tokens per request (streaming), ``run()`` drives to completion and
   returns per-request results plus throughput/latency metrics.
@@ -133,6 +138,12 @@ class EngineMetrics:
     tokens_discarded: int = 0    # sampled but thrown away by preemption
     wall_s: float = 0.0
     peak_blocks: int = 0
+    # pool capacity (constant per engine; int8 pools fit ~2x the tokens of
+    # a bf16 pool at equal HBM — see PagedKVCache.bytes_per_block)
+    kv_dtype: str = ""           # resolved storage dtype name
+    #                              ("float32"/"bfloat16"/"int8")
+    pool_token_capacity: int = 0     # num_blocks * block_size
+    kv_pool_bytes: int = 0           # device bytes held by the pool arrays
     # prefix-cache counters (zero when the cache is disabled)
     prefill_tokens: int = 0      # prompt tokens actually run through prefill
     prefix_hit_tokens: int = 0   # prompt tokens reused from the radix tree
@@ -162,7 +173,8 @@ class ContinuousEngine:
                  max_batch: int = 8, max_len: int = 512,
                  max_admit_per_step: int = 2, seed: int = 0,
                  prefix_cache: bool = True, evict_policy: str = "lru",
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, prefill_budget: int = 0,
+                 kv_dtype: Optional[str] = None):
         check_paged_support(cfg)
         self.cfg = cfg
         if cfg.opt_bf16_params:
@@ -184,13 +196,28 @@ class ContinuousEngine:
                              f"got {prefill_chunk}")
         self.prefill_chunk = (-(-prefill_chunk // block_size) * block_size
                               if prefill_chunk else 0)
-        self.pool = PagedKVCache(cfg, num_blocks, block_size)
+        # Prefill token budget per step: caps the TOTAL chunk tokens dealt
+        # across requests each step (not one chunk per request), so a herd
+        # of concurrent long prompts can't crowd decode steps out. 0 = no
+        # cap. The oldest prefilling request always advances regardless,
+        # so prefill can never livelock.
+        if prefill_budget < 0:
+            raise ValueError(f"prefill_budget must be >= 0, "
+                             f"got {prefill_budget}")
+        self.prefill_budget = prefill_budget
+        # KV pool storage: None/"auto" follow cfg.opt_int8_kv (the
+        # --optimized serving path falls back to the compute dtype when the
+        # flag is off); "bf16"/"int8" force that storage. Resolution lives
+        # in PagedKVCache so direct pool construction agrees.
+        self.pool = PagedKVCache(cfg, num_blocks, block_size,
+                                 kv_dtype=kv_dtype or "auto")
+        self.quantized = self.pool.quantized
         self.prefix_cache = (RadixCache(self.pool, evict_policy)
                              if prefix_cache else None)
         self.sched = Scheduler(self.pool, max_batch, max_len,
                                cache=self.prefix_cache)
         self.nb_max = -(-max_len // block_size)
-        self.metrics = EngineMetrics()
+        self.metrics = self._fresh_metrics()
         self._key = jax.random.PRNGKey(seed)
         # Decode batch rows are STABLE: a request keeps its row from
         # admission to eviction, and vacated rows idle as harmless zombies
@@ -202,45 +229,68 @@ class ContinuousEngine:
         self._vec = jnp.zeros((max_batch,), jnp.int32)
         self._pending: List = []     # [(device vector, [(req, epoch, row)])]
 
-        # greedy argmax is fused into both jitted steps so the common
-        # (temperature 0) path never materializes logits on the host
-        def _prefill_fn(p, t, lp):
-            lg, ks, vs = paged_prefill(p, t, lp, cfg)
-            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
-                lg, ks, vs
+        # The pool travels through every jitted step as a trailing *pools
+        # group — (k, v) for bf16/f32 storage, (k, v, k_scale, v_scale) for
+        # int8 — so the engine's call sites are mode-agnostic: they splat
+        # ``self._pools()`` in and rebind whatever comes back.
+        np_ = 4 if self.quantized else 2
 
-        def _decode_fn(p, t, kp, vp, bt, ln):
-            lg, k, v = paged_decode_step(p, t, kp, vp, bt, ln, cfg)
-            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
-                lg, k, v
+        def _sc(pools):
+            return {"k_scale": pools[2], "v_scale": pools[3]} \
+                if len(pools) == 4 else {}
+
+        # greedy argmax is fused into the jitted steps so the common
+        # (temperature 0) path never materializes logits on the host
+        def _amax(lg):
+            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32)
+
+        def _prefill_fn(p, t, lp):
+            lg, ks, vs = paged_prefill(p, t, lp, cfg,
+                                       kv_quantize=self.quantized)
+            return _amax(lg), lg, ks, vs
+
+        def _decode_fn(p, t, bt, ln, *pools):
+            out = paged_decode_step(p, t, pools[0], pools[1], bt, ln, cfg,
+                                    **_sc(pools))
+            return (_amax(out[0]), out[0]) + tuple(out[1:])
+
+        def _prefill_suffix_fn(p, t, pos0, last_rel, pt, pl, *pools):
+            lg, ks, vs = paged_prefill_suffix(p, t, pos0, last_rel,
+                                              pools[0], pools[1], pt, pl,
+                                              cfg, **_sc(pools))
+            return _amax(lg), lg, ks, vs
+
+        def _prefill_chunk_fn(p, t, pos0, last_rel, pt, blk, off, *pools):
+            out = paged_prefill_chunked(p, t, pos0, last_rel, pools[0],
+                                        pools[1], pt, blk, off, cfg,
+                                        **_sc(pools))
+            return (_amax(out[0]), out[0]) + tuple(out[1:])
+
+        def _scatter_fn(ks, vs, block_ids, *pools):
+            return scatter_prefill(pools[0], pools[1], ks, vs, block_ids,
+                                   **_sc(pools))
+
+        def _scatter_off_fn(ks, vs, blk, off, *pools):
+            return scatter_prefill_offset(pools[0], pools[1], ks, vs, blk,
+                                          off, **_sc(pools))
 
         # On accelerators, donate the pools: they are rebound to the returned
         # arrays every call, so the update aliases in-place instead of
         # holding 2x pool memory. On CPU donation serializes dispatch and
         # breaks the async decode pipeline (~4x slower steps) — skip it.
-        def _prefill_suffix_fn(p, t, pos0, last_rel, kp, vp, pt, pl):
-            lg, ks, vs = paged_prefill_suffix(p, t, pos0, last_rel, kp, vp,
-                                              pt, pl, cfg)
-            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
-                lg, ks, vs
+        def _donate(first):
+            if jax.default_backend() == "cpu":
+                return ()
+            return tuple(range(first, first + np_))
 
-        def _prefill_chunk_fn(p, t, pos0, last_rel, kp, vp, pt, blk, off):
-            lg, k, v = paged_prefill_chunked(p, t, pos0, last_rel, kp, vp,
-                                             pt, blk, off, cfg)
-            return jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32), \
-                lg, k, v
-
-        donate = jax.default_backend() != "cpu"
         self._prefill = jax.jit(_prefill_fn)
         self._prefill_suffix = jax.jit(_prefill_suffix_fn)
-        self._prefill_chunk_fn = jax.jit(
-            _prefill_chunk_fn, donate_argnums=(4, 5) if donate else ())
-        self._scatter = jax.jit(scatter_prefill,
-                                donate_argnums=(0, 1) if donate else ())
-        self._scatter_off = jax.jit(scatter_prefill_offset,
-                                    donate_argnums=(0, 1) if donate else ())
-        self._decode = jax.jit(_decode_fn,
-                               donate_argnums=(2, 3) if donate else ())
+        self._prefill_chunk_fn = jax.jit(_prefill_chunk_fn,
+                                         donate_argnums=_donate(7))
+        self._scatter = jax.jit(_scatter_fn, donate_argnums=_donate(3))
+        self._scatter_off = jax.jit(_scatter_off_fn,
+                                    donate_argnums=_donate(4))
+        self._decode = jax.jit(_decode_fn, donate_argnums=_donate(4))
 
     # -- public API -------------------------------------------------------
 
@@ -277,29 +327,31 @@ class ContinuousEngine:
             C = self.prefill_chunk
             cq = C // self.block_size
             for w in range(cq, self.nb_max + cq, cq):
-                _, _, self.pool.k, self.pool.v = self._prefill_chunk_fn(
+                _, _, *pools = self._prefill_chunk_fn(
                     self.params, zeros((1, C), jnp.int32),
                     jnp.asarray(0, jnp.int32),
                     jnp.asarray([C - 1], jnp.int32),
-                    self.pool.k, self.pool.v, zeros((1, w), jnp.int32),
-                    zeros((C,), jnp.int32), zeros((C,), jnp.int32))
+                    zeros((1, w), jnp.int32),
+                    zeros((C,), jnp.int32), zeros((C,), jnp.int32),
+                    *self._pools())
+                self._set_pools(pools)
         else:
             for nb in range(1, self.nb_max + 1):
                 Sp = nb * self.block_size
                 _, _, ks, vs = self._prefill(
                     self.params, zeros((1, Sp), jnp.int32),
                     jnp.asarray([Sp - 1], jnp.int32))
-                self.pool.k, self.pool.v = self._scatter(
-                    self.pool.k, self.pool.v, ks, vs,
-                    zeros((nb,), jnp.int32))
+                self._set_pools(self._scatter(ks, vs,
+                                              zeros((nb,), jnp.int32),
+                                              *self._pools()))
         w = 1
         while True:
             w = min(w, self.nb_max)
-            _, _, self.pool.k, self.pool.v = self._decode(
+            _, _, *pools = self._decode(
                 self.params, zeros((self.max_batch,), jnp.int32),
-                self.pool.k, self.pool.v,
                 zeros((self.max_batch, w), jnp.int32),
-                zeros((self.max_batch,), jnp.int32))
+                zeros((self.max_batch,), jnp.int32), *self._pools())
+            self._set_pools(pools)
             if w == self.nb_max:
                 break
             w *= 2
@@ -315,7 +367,7 @@ class ContinuousEngine:
             self.step()
         self.drain()
         self.sched.finished.clear()
-        self.metrics = EngineMetrics()
+        self.metrics = self._fresh_metrics()
         # the synthetic workload's allocations shouldn't show up in the
         # serving stats (notably peak_in_use → metrics.peak_blocks), and
         # its prompts shouldn't linger in the prefix cache
@@ -344,9 +396,12 @@ class ContinuousEngine:
 
         admitted = self.sched.admit(self.max_admit_per_step)
         if self.prefill_chunk:
-            # admitted requests stay PREFILL; every prefilling request
-            # (this step's admissions and earlier ones) advances one chunk
-            for req in self.sched.prefilling:
+            # admitted requests stay PREFILL; prefilling requests advance
+            # one chunk each, oldest first, until the per-step prefill
+            # token budget (if any) is spent — decodes keep their share of
+            # every step even under a herd of long prompts
+            for req in self.sched.chunk_schedule(self.prefill_chunk,
+                                                 self.prefill_budget):
                 self._do_prefill_chunk(req, events)
         else:
             for req in admitted:
@@ -442,6 +497,28 @@ class ContinuousEngine:
 
     # -- internals --------------------------------------------------------
 
+    def _fresh_metrics(self) -> EngineMetrics:
+        """Zeroed counters with the engine-constant pool-capacity fields
+        pre-stamped (valid before the first step, survive warmup's
+        reset)."""
+        return EngineMetrics(kv_dtype=self.pool.kv_dtype,
+                             pool_token_capacity=self.pool.token_capacity,
+                             kv_pool_bytes=self.pool.hbm_bytes)
+
+    def _pools(self):
+        """The pool arrays as the jitted steps' trailing *pools group."""
+        if self.quantized:
+            return (self.pool.k, self.pool.v, self.pool.k_scale,
+                    self.pool.v_scale)
+        return (self.pool.k, self.pool.v)
+
+    def _set_pools(self, pools) -> None:
+        if self.quantized:
+            (self.pool.k, self.pool.v, self.pool.k_scale,
+             self.pool.v_scale) = pools
+        else:
+            self.pool.k, self.pool.v = pools
+
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
@@ -457,8 +534,7 @@ class ContinuousEngine:
         greedy, lg, ks, vs = self._prefill(self.params, jnp.asarray(tokens),
                                            jnp.asarray([plen - 1], jnp.int32))
         blocks = jnp.asarray(self.pool.blocks_of(req.req_id), jnp.int32)
-        self.pool.k, self.pool.v = self._scatter(self.pool.k, self.pool.v,
-                                                 ks, vs, blocks)
+        self._set_pools(self._scatter(ks, vs, blocks, *self._pools()))
         return greedy, lg
 
     def _prefill_from_offset(self, req: Request, m: int):
@@ -485,11 +561,10 @@ class ContinuousEngine:
         off[:sl] = pos[:sl] % bs
         greedy, lg, ks, vs = self._prefill_suffix(
             self.params, jnp.asarray(tokens), jnp.asarray(m, jnp.int32),
-            jnp.asarray([sl - 1], jnp.int32), self.pool.k, self.pool.v,
-            jnp.asarray(pt), jnp.asarray([m], jnp.int32))
-        self.pool.k, self.pool.v = self._scatter_off(
-            self.pool.k, self.pool.v, ks, vs, jnp.asarray(blk),
-            jnp.asarray(off))
+            jnp.asarray([sl - 1], jnp.int32), jnp.asarray(pt),
+            jnp.asarray([m], jnp.int32), *self._pools())
+        self._set_pools(self._scatter_off(ks, vs, jnp.asarray(blk),
+                                          jnp.asarray(off), *self._pools()))
         return greedy, lg
 
     def _do_prefill(self, req: Request, events: Dict[int, List[int]]) -> None:
@@ -533,24 +608,24 @@ class ContinuousEngine:
         off = np.zeros((C,), np.int32)
         blk[:sl] = table[pos[:sl] // bs]
         off[:sl] = pos[:sl] % bs
-        greedy, lg, self.pool.k, self.pool.v = self._prefill_chunk_fn(
+        greedy, lg, *pools = self._prefill_chunk_fn(
             self.params, jnp.asarray(tokens), jnp.asarray(m, jnp.int32),
-            jnp.asarray([sl - 1], jnp.int32), self.pool.k, self.pool.v,
-            jnp.asarray(pt), jnp.asarray(blk), jnp.asarray(off))
+            jnp.asarray([sl - 1], jnp.int32), jnp.asarray(pt),
+            jnp.asarray(blk), jnp.asarray(off), *self._pools())
+        self._set_pools(pools)
         req.n_prefilled = m + sl
         self.metrics.prefill_tokens += sl
         self.metrics.prefill_chunks += 1
         if req.n_prefilled == req.prompt_len:
             self._join_decode(req, greedy, lg, events)
         elif self.prefix_cache is not None:
-            # publish completed chunks as they land (full blocks only: a
-            # partial tail donated mid-prefill would leave a stale
-            # second node on the same physical block once later chunks
-            # complete it) so requests admitted while this long prompt is
-            # still prefilling already share its prefix
-            full = (req.n_prefilled // bs) * bs
-            if full > 0:
-                self.prefix_cache.insert(req.req_id, req.prompt[:full])
+            # publish completed chunks as they land — including a partial
+            # tail block (its leaf is promoted in place by insert() once
+            # later chunks fill the block, so no stale double-owner
+            # survives) — so a request admitted while this long prompt is
+            # still mid-prefill gets the maximal possible hit
+            self.prefix_cache.insert(req.req_id,
+                                     req.prompt[:req.n_prefilled])
 
     def _join_decode(self, req: Request, greedy, lg,
                      events: Dict[int, List[int]]) -> None:
@@ -626,9 +701,10 @@ class ContinuousEngine:
         bt[[i for i, _ in occ]] = self.pool.table_array(
             [r.req_id for _, r in occ], w)
 
-        greedy, lg, self.pool.k, self.pool.v = self._decode(
-            self.params, tokens1, self.pool.k, self.pool.v,
-            jnp.asarray(bt), jnp.asarray(lengths))
+        greedy, lg, *pools = self._decode(
+            self.params, tokens1, jnp.asarray(bt), jnp.asarray(lengths),
+            *self._pools())
+        self._set_pools(pools)
 
         if greedy_only:
             # async: token values stay on device until drained; bookkeeping

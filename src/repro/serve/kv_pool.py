@@ -5,6 +5,22 @@ Dh)`` (layer-major inside each block, so one physical block holds a token
 span for *every* layer and the per-request block table is shared across the
 layer scan).
 
+**Quantized storage (``kv_dtype="int8"``).** K/V values are stored as
+symmetric int8 with one float32 scale per *row* — per (layer, block, head,
+token) — in two sibling pools shaped ``(L, num_blocks, Hkv, block_size)``.
+The scale tensors are indexed by the same physical block id as the values,
+so every operation that moves a block (COW ``copy_block``, radix-tree
+sharing, refcounting) carries the scales with it for free: sharing is
+metadata-only either way, and the one device op that touches block payloads
+(``copy_block``) copies values and scales together. Writers quantize rows
+on scatter (``serve/paged_step.py``); readers dequantize at gather time —
+inside the Pallas kernels on TPU (``kernels/flash_decode_paged`` /
+``flash_prefill_paged``), post-gather in the pure-JAX refs — and always
+accumulate attention in float32, mirroring the paper's
+int-storage/wide-accumulate split. Per-row (not per-block) scales are what
+make decode append O(1): a new token's row quantizes against its own amax
+and never re-quantizes the rest of the block.
+
 **Garbage-block-0 convention.** Physical block 0 is reserved and never
 allocated: every padded structure in the serving stack — padding rows of the
 decode batch, padded block-table tails, padded scatter rows of an offset
@@ -59,25 +75,77 @@ class PoolStats:
         return self.blocks_in_use / max(self.num_blocks, 1)
 
 
+KV_DTYPES = ("auto", "bf16", "int8")
+
+
 class PagedKVCache:
-    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 kv_dtype: str = "auto"):
         from repro.serve.paged_step import check_paged_support
         check_paged_support(cfg)     # one rule set with the model steps
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"got {kv_dtype!r}")
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
         L = cfg.n_layers
         Hkv, Dh = cfg.n_kv_heads, cfg.head_dim_
-        dt = cfg.compute_dtype_
+        dt = self._storage_dtype(cfg, kv_dtype)
+        # resolved storage name ("auto" would hide what the pool holds)
+        self.kv_dtype = jnp.dtype(dt).name
+        self.quantized = dt == jnp.int8
         # +1: block 0 is the reserved garbage block, never allocated.
         shape = (L, num_blocks + 1, Hkv, block_size, Dh)
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
+        if self.quantized:
+            # one f32 scale per stored row, block-indexed like the values
+            sshape = (L, num_blocks + 1, Hkv, block_size)
+            self.k_scale = jnp.zeros(sshape, jnp.float32)
+            self.v_scale = jnp.zeros(sshape, jnp.float32)
+        else:
+            self.k_scale = self.v_scale = None
         self._free: List[int] = list(range(1, num_blocks + 1))
         self._tables: Dict[int, List[int]] = {}
         self._ref = np.zeros(num_blocks + 1, np.int32)   # [0] unused
         self._copy = None            # jitted COW kernel, built on first use
         self.stats = PoolStats(num_blocks)
+
+    # -- storage sizing ---------------------------------------------------
+
+    @staticmethod
+    def _storage_dtype(cfg: ModelConfig, kv_dtype: str):
+        if kv_dtype == "int8" or (kv_dtype == "auto" and cfg.opt_int8_kv):
+            return jnp.int8              # "auto" follows the --optimized flag
+        if kv_dtype == "bf16":
+            return jnp.dtype(jnp.bfloat16)
+        return cfg.compute_dtype_
+
+    @staticmethod
+    def bytes_per_block(cfg: ModelConfig, block_size: int,
+                        kv_dtype: str = "auto") -> int:
+        """HBM bytes ONE usable block costs across all layers (K + V, plus
+        the per-row scales when quantized) — the unit the equal-memory-
+        budget benchmarks size pools with."""
+        L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+        dt = jnp.dtype(PagedKVCache._storage_dtype(cfg, kv_dtype))
+        per = 2 * L * Hkv * block_size * Dh * dt.itemsize
+        if dt == jnp.int8:
+            per += 2 * L * Hkv * block_size * 4        # f32 scales
+        return per
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Device bytes actually held by the pool arrays (incl. block 0)."""
+        n = self.k.nbytes + self.v.nbytes
+        if self.quantized:
+            n += self.k_scale.nbytes + self.v_scale.nbytes
+        return n
+
+    @property
+    def token_capacity(self) -> int:
+        return self.num_blocks * self.block_size
 
     # -- refcounts --------------------------------------------------------
 
@@ -189,21 +257,28 @@ class PagedKVCache:
     def copy_block(self, src: int, dst: int) -> None:
         """Copy one physical block's K/V (all layers) ``src`` → ``dst``:
         the copy-on-write step when a request extends a partially-filled
-        cached tail block that other owners must keep intact. On
-        accelerators the pools are donated so the update aliases in place;
-        on CPU donation would serialize dispatch (see engine) — skipped."""
+        cached tail block that other owners must keep intact. Quantized
+        pools copy the per-row scales alongside the values — a COW fork
+        must reproduce the source rows bit-for-bit. On accelerators the
+        pools are donated so the update aliases in place; on CPU donation
+        would serialize dispatch (see engine) — skipped."""
         if self._copy is None:
             import jax
 
-            def _cp(k, v, s, d):
-                return k.at[:, d].set(k[:, s]), v.at[:, d].set(v[:, s])
+            def _cp(s, d, *pools):
+                return tuple(p.at[:, d].set(p[:, s]) for p in pools)
 
             donate = jax.default_backend() != "cpu"
+            n = 4 if self.quantized else 2
             self._copy = jax.jit(
-                _cp, donate_argnums=(0, 1) if donate else ())
-        self.k, self.v = self._copy(self.k, self.v,
-                                    jnp.asarray(src, jnp.int32),
-                                    jnp.asarray(dst, jnp.int32))
+                _cp, donate_argnums=tuple(range(2, 2 + n)) if donate else ())
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = self._copy(
+                src, dst, self.k, self.v, self.k_scale, self.v_scale)
+        else:
+            self.k, self.v = self._copy(src, dst, self.k, self.v)
         self.stats.cow_copies += 1
 
     # -- views ------------------------------------------------------------

@@ -39,6 +39,17 @@ Attention math is identical to the contiguous path (same Unnormed-Softmax-
 Unit recurrence): on TPU / under ``cfg.interpret_kernels`` the Pallas
 ``flash_decode_paged`` kernel runs; elsewhere a pure-JAX gather fallback
 keeps CPU tests fast.
+
+**Int8 pools (quantize-on-scatter).** Every step function takes the pool's
+optional per-row scale tensors (``k_scale``/``v_scale``; ``None`` for
+bf16/f32 pools — the pool dtype, static under jit, selects the path).
+Writers quantize rows symmetrically per (head, token) at the moment they
+scatter (``attention_apply``'s projections stay full precision); readers
+dequantize at gather — fused into the Pallas kernels on TPU, post-gather
+in the refs — and accumulate in fp32, so the only precision loss is the
+int8 rounding of the stored K/V rows, the same contract as the dense
+``models/attention.py`` int8 decode branch. Functions that update the pool
+return the new scale tensors after the new pools (callers unpack by mode).
 """
 from __future__ import annotations
 
@@ -51,7 +62,7 @@ from repro.configs.base import ModelConfig
 from repro.core.numerics import NEG_INF
 from repro.kernels.flash_decode_paged import (flash_decode_paged,
                                               paged_decode_ref)
-from repro.kernels.flash_decode_paged.ref import gather_kv
+from repro.kernels.flash_decode_paged.ref import gather_kv_dequant
 from repro.kernels.flash_prefill_paged import flash_prefill_paged_op
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -72,9 +83,6 @@ def check_paged_support(cfg: ModelConfig) -> None:
                          "not supported")
     if cfg.window:
         raise ValueError("paged serving: sliding-window archs not supported")
-    if cfg.opt_int8_kv:
-        raise ValueError("paged serving: int8 KV pool not implemented "
-                         "(ROADMAP follow-up)")
 
 
 # ---------------------------------------------------------------------------
@@ -82,23 +90,60 @@ def check_paged_support(cfg: ModelConfig) -> None:
 # ---------------------------------------------------------------------------
 
 
+def _fake_quant_kv(t: jax.Array) -> jax.Array:
+    """Round-trip ``t`` through the pool's int8 representation. Re-
+    quantizing the result reproduces the exact same int8 codes (the amax
+    row maps back to ±127 and the scale round-trips within ~2^-24, far
+    inside round-to-nearest's 0.5 margin), so a prefill that attends
+    fake-quantized rows sees bit-identical values to every later reader
+    that dequantizes the scattered block — chunked prefill, decode, and
+    prefix-cache rehits all agree on what a cached token "is"."""
+    q8, sc = attn_mod.quantize_kv(t)
+    return attn_mod.dequantize_kv(q8, sc, t.dtype)
+
+
 def paged_prefill(
     params,
     tokens: jax.Array,       # (B, Sp) prompts right-padded to a block multiple
     last_pos: jax.Array,     # (B,) int32 index of the true last prompt token
     cfg: ModelConfig,
+    kv_quantize: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (true-last-token logits (B, V), k, v (L, B, Hkv, Sp, Dh))."""
+    """Returns (true-last-token logits (B, V), k, v (L, B, Hkv, Sp, Dh)).
+
+    ``kv_quantize`` (int8 pools) round-trips each layer's K/V through the
+    int8 grid *before* the in-prompt attention, so the prompt attends the
+    same values the pool will store (the scatter's re-quantization is
+    code-exact on fake-quantized rows) — without it, a chunked re-prefill
+    of the same prompt would see slightly different KV than the one-shot
+    path computed. The quantized branch runs XLA-level chunked softermax
+    attention directly (flash/ring impl selection doesn't apply — the KV
+    it would attend is no longer what ``attention_apply`` projects)."""
     B, Sp = tokens.shape
     params = maybe_cast_params(params, cfg)
+    dh = cfg.head_dim_
+    premult, intmax = attn_mod._mode(cfg)
     positions = jnp.broadcast_to(jnp.arange(Sp, dtype=jnp.int32), (B, Sp))
     x = embed(params["embed"], tokens, cfg)
 
     def body(x, bp):
         h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
-        y, k, v = attn_mod.attention_apply(
-            bp["mixer"], h, cfg, positions=positions, causal=True,
-            return_kv=True)
+        if kv_quantize:
+            q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+            k = _fake_quant_kv(k)
+            v = _fake_quant_kv(v)
+            q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
+            q = shard_act(q, ("batch", "act_heads", "seq", "head_dim"))
+            k = shard_act(k, ("batch", "act_heads", "seq", "head_dim"))
+            v = shard_act(v, ("batch", "act_heads", "seq", "head_dim"))
+            o = attn_mod.chunked_attention(q, k, v, causal=True,
+                                           intmax=intmax,
+                                           chunk=cfg.attention_chunk)
+            y = attn_mod._out_proj(bp["mixer"], o, cfg)
+        else:
+            y, k, v = attn_mod.attention_apply(
+                bp["mixer"], h, cfg, positions=positions, causal=True,
+                return_kv=True)
         x = x + y
         h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
         if cfg.family == "moe":
@@ -122,7 +167,12 @@ def scatter_prefill(
     ks: jax.Array,           # (L, 1, Hkv, Sp, Dh) from paged_prefill (B=1)
     vs: jax.Array,
     block_ids: jax.Array,    # (nb,) int32 physical blocks, nb*BS == Sp
-) -> Tuple[jax.Array, jax.Array]:
+    k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
+    v_scale: jax.Array = None,
+):
+    """Returns (k_pool, v_pool) — or (k_pool, v_pool, k_scale, v_scale)
+    when the pool is int8: rows are quantized per (layer, head, token) at
+    scatter time and their scales land in the sibling scale pools."""
     L, _, Hkv, Sp, Dh = ks.shape
     BS = k_pool.shape[3]
     nb = Sp // BS
@@ -132,7 +182,16 @@ def scatter_prefill(
         blocks = jnp.moveaxis(blocks, 2, 1)          # (L, nb, Hkv, BS, Dh)
         return pool.at[:, block_ids].set(blocks.astype(pool.dtype))
 
-    return place(k_pool, ks), place(v_pool, vs)
+    def place_scale(pool, sc):                       # sc (L, 1, Hkv, Sp)
+        blocks = jnp.moveaxis(sc[:, 0].reshape(L, Hkv, nb, BS), 2, 1)
+        return pool.at[:, block_ids].set(blocks)
+
+    if k_pool.dtype != jnp.int8:
+        return place(k_pool, ks), place(v_pool, vs)
+    kq, ksc = attn_mod.quantize_kv(ks)
+    vq, vsc = attn_mod.quantize_kv(vs)
+    return (place(k_pool, kq), place(v_pool, vq),
+            place_scale(k_scale, ksc), place_scale(v_scale, vsc))
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +242,8 @@ def paged_prefill_suffix(
     prefix_table: jax.Array,  # (B, W) physical blocks of the cached prefix
     prefix_len: jax.Array,    # (B,) cached tokens (pad rows masked out)
     cfg: ModelConfig,
+    k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
+    v_scale: jax.Array = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Prefill only the uncached suffix of a prompt whose first ``pos0``
     tokens are already resident in the pool (radix prefix-cache hit).
@@ -190,15 +251,18 @@ def paged_prefill_suffix(
     Per layer the suffix Q/K/V are computed at absolute positions
     ``pos0 + i`` (RoPE stays consistent with the cold path) and attention
     runs over the cached prefix — gathered from the pool through
-    ``prefix_table`` — concatenated with the in-flight suffix. Returns
-    (true-last-token logits (B, V), ks, vs (L, B, Hkv, Sp, Dh)); the caller
-    scatters ks/vs with ``scatter_prefill_offset``. ``pos0 == 0`` with an
-    empty prefix degenerates to ``paged_prefill``'s math.
+    ``prefix_table``, dequantized when the pool is int8 — concatenated with
+    the in-flight suffix. Returns (true-last-token logits (B, V), ks, vs
+    (L, B, Hkv, Sp, Dh)); the caller scatters ks/vs with
+    ``scatter_prefill_offset`` (which quantizes them for int8 pools).
+    ``pos0 == 0`` with an empty prefix degenerates to ``paged_prefill``'s
+    math.
     """
     B, Sp = tokens.shape
     params = maybe_cast_params(params, cfg)
     dh = cfg.head_dim_
     premult, intmax = attn_mod._mode(cfg)
+    quantized = k_pool.dtype == jnp.int8
     positions = pos0 + jnp.broadcast_to(jnp.arange(Sp, dtype=jnp.int32),
                                         (B, Sp))
     x = embed(params["embed"], tokens, cfg)
@@ -208,12 +272,22 @@ def paged_prefill_suffix(
         prefix_len[:, None]                                   # (B, W*BS)
 
     def body(x, xs):
-        bp, kp_l, vp_l = xs
+        if quantized:
+            bp, kp_l, vp_l, ksc_l, vsc_l = xs
+        else:
+            bp, kp_l, vp_l = xs
+            ksc_l = vsc_l = None
         h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
         q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+        if quantized:
+            # the in-flight suffix must attend the same values the pool
+            # will store (see _fake_quant_kv) — the cached prefix is
+            # already the dequantized pool rows
+            k = _fake_quant_kv(k)
+            v = _fake_quant_kv(v)
         q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
-        k_pre = gather_kv(kp_l, prefix_table).astype(k.dtype)
-        v_pre = gather_kv(vp_l, prefix_table).astype(v.dtype)
+        k_pre = gather_kv_dequant(kp_l, ksc_l, prefix_table).astype(k.dtype)
+        v_pre = gather_kv_dequant(vp_l, vsc_l, prefix_table).astype(v.dtype)
         o = _suffix_attention(q, k_pre, v_pre, k, v, pre_valid, positions,
                               intmax)
         y = attn_mod._out_proj(bp["mixer"], o, cfg)
@@ -226,7 +300,9 @@ def paged_prefill_suffix(
         x = shard_act(x + f, ("batch", "seq", "act_embed"))
         return x, (k, v)
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], k_pool, v_pool))
+    xs = (params["blocks"], k_pool, v_pool, k_scale, v_scale) if quantized \
+        else (params["blocks"], k_pool, v_pool)
+    x, (ks, vs) = jax.lax.scan(body, x, xs)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     x_last = jnp.take_along_axis(
         x, last_rel[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, d)
@@ -241,12 +317,15 @@ def scatter_prefill_offset(
     vs: jax.Array,
     blk: jax.Array,          # (Sp,) int32 physical block per suffix row
     off: jax.Array,          # (Sp,) int32 row within that block
-) -> Tuple[jax.Array, jax.Array]:
+    k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
+    v_scale: jax.Array = None,
+):
     """Row-granular scatter for an offset prefill: suffix row ``i`` lands at
     ``pool[:, blk[i], :, off[i], :]``. The suffix may start mid-block (a
     copy-on-write tail continues where the cached rows end), so unlike
     ``scatter_prefill`` the destination is not whole blocks; the caller
-    routes padding rows to garbage block 0."""
+    routes padding rows to garbage block 0. Int8 pools quantize rows here
+    and return the updated scale pools as well."""
     L, _, Hkv, Sp, Dh = ks.shape
     h = jnp.arange(Hkv)
 
@@ -255,7 +334,16 @@ def scatter_prefill_offset(
         return pool.at[:, blk[:, None], h[None, :], off[:, None], :].set(
             rows.astype(pool.dtype))
 
-    return place(k_pool, ks), place(v_pool, vs)
+    def place_scale(pool, sc):                        # sc (L, 1, Hkv, Sp)
+        rows = jnp.swapaxes(sc[:, 0], 1, 2)           # (L, Sp, Hkv)
+        return pool.at[:, blk[:, None], h[None, :], off[:, None]].set(rows)
+
+    if k_pool.dtype != jnp.int8:
+        return place(k_pool, ks), place(v_pool, vs)
+    kq, ksc = attn_mod.quantize_kv(ks)
+    vq, vsc = attn_mod.quantize_kv(vs)
+    return (place(k_pool, kq), place(v_pool, vq),
+            place_scale(k_scale, ksc), place_scale(v_scale, vsc))
 
 
 # ---------------------------------------------------------------------------
@@ -263,7 +351,8 @@ def scatter_prefill_offset(
 # ---------------------------------------------------------------------------
 
 
-def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax):
+def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax,
+                     ksc_l=None, vsc_l=None):
     """Chunk queries over block-table-resident KV through the one shared
     dispatcher: Pallas kernel on TPU / under ``cfg.interpret_kernels``;
     elsewhere the pure-JAX split oracle, which skips the causal mask on
@@ -273,6 +362,7 @@ def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax):
     BS = k_pool_l.shape[2]
     tail = 2 * (-(-q.shape[2] // BS)) + 1
     return flash_prefill_paged_op(q, k_pool_l, v_pool_l, table, pos0,
+                                  k_scale=ksc_l, v_scale=vsc_l,
                                   intmax=intmax,
                                   interpret=cfg.interpret_kernels,
                                   split_tail_blocks=tail)
@@ -296,25 +386,32 @@ def paged_prefill_chunked(
     blk: jax.Array,           # (C,) int32 physical block per chunk row
     off: jax.Array,           # (C,) int32 row within that block
     cfg: ModelConfig,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
+    v_scale: jax.Array = None,
+):
     """One chunk of a chunked prefill. Per layer: scatter the chunk's K/V
     rows into the pool at (blk, off) — pad rows route to garbage block 0 —
     then run chunk-queries-over-pool attention through ``table``. The
     scatter comes *first*, so the attention sees [cached prefix ‖ earlier
     chunks ‖ this chunk] as one logical KV stream and the positional causal
     mask does the rest; the pool update (instead of a returned K/V stack)
-    is also what the next chunk of the same prompt resumes from.
+    is also what the next chunk of the same prompt resumes from. With an
+    int8 pool the chunk's rows are quantized before the scatter, so the
+    chunk attends its *own* rows through the same dequant path as the
+    prefix — every reader of a given token sees identical values.
 
-    Returns (chunk-last-token logits (1, V), new k_pool, new v_pool). The
-    logits matter only for the final chunk (they seed decoding); computing
-    them per chunk costs one (1, d) @ (d, V) matmul. ``pos0 == 0`` with a
-    chunk covering the whole prompt degenerates to ``paged_prefill``'s
-    math, which is what the chunked-vs-one-shot greedy-equality test pins.
+    Returns (chunk-last-token logits (1, V), new k_pool, new v_pool[, new
+    k_scale, new v_scale]). The logits matter only for the final chunk
+    (they seed decoding); computing them per chunk costs one (1, d) @
+    (d, V) matmul. ``pos0 == 0`` with a chunk covering the whole prompt
+    degenerates to ``paged_prefill``'s math, which is what the
+    chunked-vs-one-shot greedy-equality test pins.
     """
     B, C = tokens.shape
     params = maybe_cast_params(params, cfg)
     dh = cfg.head_dim_
     premult, intmax = attn_mod._mode(cfg)
+    quantized = k_pool.dtype == jnp.int8
     positions = pos0 + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
                                         (B, C))
     x = embed(params["embed"], tokens, cfg)
@@ -323,17 +420,29 @@ def paged_prefill_chunked(
     qpos0 = jnp.broadcast_to(pos0, (B,)).astype(jnp.int32)
 
     def body(x, xs):
-        bp, kp_l, vp_l = xs
+        if quantized:
+            bp, kp_l, vp_l, ksc_l, vsc_l = xs
+        else:
+            bp, kp_l, vp_l = xs
+            ksc_l = vsc_l = None
         h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
         q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
         rows_k = jnp.swapaxes(k[0], 0, 1)             # (C, Hkv, Dh)
         rows_v = jnp.swapaxes(v[0], 0, 1)
+        if quantized:
+            rows_k, sc_k = attn_mod.quantize_kv(rows_k)   # (C, Hkv) scales
+            rows_v, sc_v = attn_mod.quantize_kv(rows_v)
+            ksc_l = ksc_l.at[blk[:, None], h_idx[None, :],
+                             off[:, None]].set(sc_k)
+            vsc_l = vsc_l.at[blk[:, None], h_idx[None, :],
+                             off[:, None]].set(sc_v)
         kp_l = kp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
             rows_k.astype(kp_l.dtype))
         vp_l = vp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
             rows_v.astype(vp_l.dtype))
         q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
-        o = _chunk_attention(q, kp_l, vp_l, table, qpos0, cfg, intmax)
+        o = _chunk_attention(q, kp_l, vp_l, table, qpos0, cfg, intmax,
+                             ksc_l, vsc_l)
         y = attn_mod._out_proj(bp["mixer"], o, cfg)
         x = x + y
         h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
@@ -342,14 +451,22 @@ def paged_prefill_chunked(
         else:
             f = mlp(bp["ffn"], h2, cfg.activation)
         x = shard_act(x + f, ("batch", "seq", "act_embed"))
+        if quantized:
+            return x, (kp_l, vp_l, ksc_l, vsc_l)
         return x, (kp_l, vp_l)
 
-    x, (new_k, new_v) = jax.lax.scan(body, x, (params["blocks"], k_pool,
-                                               v_pool))
+    if quantized:
+        x, (new_k, new_v, new_ksc, new_vsc) = jax.lax.scan(
+            body, x, (params["blocks"], k_pool, v_pool, k_scale, v_scale))
+    else:
+        x, (new_k, new_v) = jax.lax.scan(body, x, (params["blocks"], k_pool,
+                                                   v_pool))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     x_last = jnp.take_along_axis(
         x, last_rel[:, None, None].astype(jnp.int32), axis=1)  # (1, 1, d)
     lg = logits(params["embed"], x_last, cfg)[:, 0]
+    if quantized:
+        return lg, new_k, new_v, new_ksc, new_vsc
     return lg, new_k, new_v
 
 
@@ -359,15 +476,17 @@ def paged_prefill_chunked(
 
 
 def _paged_attention(q, k_pool_l, v_pool_l, block_tables, new_len, cfg,
-                     intmax):
+                     intmax, ksc_l=None, vsc_l=None):
     if cfg.interpret_kernels:
         return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
-                                  new_len, intmax=intmax, interpret=True)
+                                  new_len, k_scale=ksc_l, v_scale=vsc_l,
+                                  intmax=intmax, interpret=True)
     if jax.default_backend() == "tpu":
         return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
-                                  new_len, intmax=intmax)
+                                  new_len, k_scale=ksc_l, v_scale=vsc_l,
+                                  intmax=intmax)
     return paged_decode_ref(q, k_pool_l, v_pool_l, block_tables, new_len,
-                            intmax=intmax)
+                            k_scale=ksc_l, v_scale=vsc_l, intmax=intmax)
 
 
 def paged_decode_step(
@@ -378,13 +497,18 @@ def paged_decode_step(
     block_tables: jax.Array,  # (B, nb) int32
     lengths: jax.Array,       # (B,) tokens already in cache
     cfg: ModelConfig,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
+    v_scale: jax.Array = None,
+):
     """One continuous-batch decode step.
 
     Writes each sequence's new K/V row at logical position ``lengths[b]``
     (physical: table[b, pos // BS] offset pos % BS), attends over
-    ``lengths + 1`` entries, and returns (logits (B, V), new pools). The
-    caller advances its host-side lengths by one afterwards.
+    ``lengths + 1`` entries, and returns (logits (B, V), new pools[, new
+    scale pools]). With an int8 pool the new row is quantized against its
+    own amax before the write — per-row scales make the append O(1) — and
+    attention dequantizes on gather. The caller advances its host-side
+    lengths by one afterwards.
     """
     params = maybe_cast_params(params, cfg)
     B = tokens1.shape[0]
@@ -393,6 +517,7 @@ def paged_decode_step(
     dt = cfg.compute_dtype_
     dh = cfg.head_dim_
     premult, intmax = attn_mod._mode(cfg)
+    quantized = k_pool.dtype == jnp.int8
 
     table = params["embed"]["embedding"].astype(dt)
     x1 = shard_act(table[tokens1], ("batch", "act_embed"))
@@ -404,7 +529,11 @@ def paged_decode_step(
     h_idx = jnp.arange(Hkv)
 
     def body(x1, xs):
-        bp, kp_l, vp_l = xs
+        if quantized:
+            bp, kp_l, vp_l, ksc_l, vsc_l = xs
+        else:
+            bp, kp_l, vp_l = xs
+            ksc_l = vsc_l = None
         h = rmsnorm(bp["ln1"], x1, cfg.norm_eps)
         q = jnp.einsum("bd,dhk->bhk", h, bp["mixer"]["wq"].astype(dt))
         k = jnp.einsum("bd,dhk->bhk", h, bp["mixer"]["wk"].astype(dt))
@@ -416,13 +545,20 @@ def paged_decode_step(
             pos = lengths[:, None]                    # (B, 1): next position
             q = rope(q[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
             k = rope(k[:, :, None, :], pos[:, :, None], cfg.rope_theta)[:, :, 0]
+        if quantized:
+            k, k_sc = attn_mod.quantize_kv(k)         # (B, Hkv) row scales
+            v, v_sc = attn_mod.quantize_kv(v)
+            ksc_l = ksc_l.at[blk[:, None], h_idx[None, :],
+                             off[:, None]].set(k_sc)
+            vsc_l = vsc_l.at[blk[:, None], h_idx[None, :],
+                             off[:, None]].set(v_sc)
         kp_l = kp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
             k.astype(kp_l.dtype))
         vp_l = vp_l.at[blk[:, None], h_idx[None, :], off[:, None], :].set(
             v.astype(vp_l.dtype))
         q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
         o = _paged_attention(q, kp_l, vp_l, block_tables, new_len, cfg,
-                             intmax)
+                             intmax, ksc_l, vsc_l)
         y = jnp.einsum("bhk,hkd->bd", o, bp["mixer"]["wo"].astype(dt))
         x1 = x1 + y
         h2 = rmsnorm(bp["ln2"], x1, cfg.norm_eps)
@@ -431,10 +567,18 @@ def paged_decode_step(
             f = f[:, 0]
         else:
             f = mlp(bp["ffn"], h2, cfg.activation)
+        if quantized:
+            return x1 + f, (kp_l, vp_l, ksc_l, vsc_l)
         return x1 + f, (kp_l, vp_l)
 
-    x1, (new_k, new_v) = jax.lax.scan(body, x1, (params["blocks"],
-                                                 k_pool, v_pool))
+    if quantized:
+        x1, (new_k, new_v, new_ksc, new_vsc) = jax.lax.scan(
+            body, x1, (params["blocks"], k_pool, v_pool, k_scale, v_scale))
+    else:
+        x1, (new_k, new_v) = jax.lax.scan(body, x1, (params["blocks"],
+                                                     k_pool, v_pool))
     x1 = rmsnorm(params["final_norm"], x1, cfg.norm_eps)
     lg = logits(params["embed"], x1[:, None, :], cfg)[:, 0]
+    if quantized:
+        return lg, new_k, new_v, new_ksc, new_vsc
     return lg, new_k, new_v

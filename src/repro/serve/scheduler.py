@@ -212,6 +212,26 @@ class Scheduler:
         first."""
         return [r for r in self.running if r.state == PREFILL]
 
+    def chunk_schedule(self, chunk_tokens: int,
+                       budget: int = 0) -> List[Request]:
+        """The prefilling requests to advance this step, oldest first,
+        under a total per-step chunk-token ``budget`` (0 = uncapped; the
+        engine's ``prefill_budget``). Without a budget every prefilling
+        request deals one chunk per step — fine for a few long prompts,
+        but a herd of them can make every step mostly prefill. The budget
+        caps the *sum* of chunk tokens dealt per step; the oldest
+        prefilling request is always scheduled even when its chunk alone
+        exceeds the budget, so prefill always makes progress."""
+        out: List[Request] = []
+        spent = 0
+        for req in self.prefilling:
+            n = min(chunk_tokens, req.prompt_len - req.n_prefilled)
+            if out and budget > 0 and spent + n > budget:
+                break
+            out.append(req)
+            spent += n
+        return out
+
     def next_chunk(self, req: Request, chunk_tokens: int):
         """Deal the next prefill chunk of ``req``: returns ``(start, n)``
         token coordinates into the prompt (``start`` = first uncached,
