@@ -58,13 +58,6 @@ def make_docs(n: int, shared_len: int, doc_len: int, vocab: int,
                            ).astype(np.int32) for _ in range(n)]
 
 
-def _pow2(n: int) -> int:
-    w = 1
-    while w < n:
-        w *= 2
-    return w
-
-
 def _time_op_paths(cfg, params, prompt, *, shared_len, block_size, chunk,
                    repeats):
     """Prefill ``prompt[shared_len:]`` over a resident prefix through both
@@ -82,7 +75,8 @@ def _time_op_paths(cfg, params, prompt, *, shared_len, block_size, chunk,
     from repro.serve.kv_pool import PagedKVCache
     from repro.serve.paged_step import (paged_prefill, paged_prefill_chunked,
                                         paged_prefill_suffix, scatter_prefill,
-                                        scatter_prefill_offset)
+                                        scatter_prefill_offset,
+                                        table_width_bucket)
 
     bs = block_size
     S = prompt.shape[0]
@@ -117,7 +111,7 @@ def _time_op_paths(cfg, params, prompt, *, shared_len, block_size, chunk,
     blk = jnp.asarray(blk_np, jnp.int32)
     off = jnp.asarray(pos % bs, jnp.int32)
     W_pre = -(-m0 // bs)
-    wp = _pow2(W_pre)                # dense engine path: pow2 prefix table
+    wp = table_width_bucket(W_pre)   # dense engine path: pow2 prefix table
     ptd = np.zeros((1, wp), np.int32)
     ptd[0, :W_pre] = table[:W_pre]
     ptd = jnp.asarray(ptd)
@@ -133,7 +127,7 @@ def _time_op_paths(cfg, params, prompt, *, shared_len, block_size, chunk,
         ct = np.zeros((1, chunk), np.int32)    # engine pads chunks to C
         ct[0, :c] = prompt[m:m + c]
         cover = min(-(-(m + chunk) // bs), nb)
-        w = -(-cover // cq) * cq     # chunked engine path: quantized cover
+        w = table_width_bucket(cover, chunk_blocks=cq)  # engine policy
         pt = np.zeros((1, w), np.int32)
         pt[0, :cover] = table[:cover]
         cpos = m + np.arange(chunk)

@@ -54,6 +54,10 @@ def main() -> None:
     from benchmarks import kv_int8_bench
     kv_int8_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Paged decode — grouped/tiled/split kernel vs per-head walk")
+    from benchmarks import decode_paged_bench
+    decode_paged_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

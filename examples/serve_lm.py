@@ -28,6 +28,13 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=64)
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix-tree prompt-prefix reuse")
+    ap.add_argument("--kv-tile-blocks", type=int, default=1,
+                    help="pool blocks per kernel kv grid step (TPU knob; "
+                         "layout-only, identical outputs)")
+    ap.add_argument("--decode-split-k", type=int, default=1,
+                    help="parallel KV partitions per decode lane (TPU "
+                         "knob; same attention up to fp summation order "
+                         "of the split partials)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
@@ -43,7 +50,9 @@ def main():
         cfg, params, block_size=args.block_size,
         num_blocks=args.num_blocks, max_batch=args.requests,
         max_len=args.shared_prefix + args.prompt_len + args.max_new,
-        prefix_cache=not args.no_prefix_cache)
+        prefix_cache=not args.no_prefix_cache,
+        kv_tile_blocks=args.kv_tile_blocks,
+        decode_split_k=args.decode_split_k)
 
     rng = np.random.default_rng(0)
     # mixed lengths: the whole point of per-request paged admission

@@ -151,6 +151,54 @@ def softermax_online_scan(x: jax.Array, block: int = 128) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# 3b. Split-K merge: combining partial online states (§III.C corollary).
+# ---------------------------------------------------------------------------
+
+
+def softermax_merge(m: jax.Array, d: jax.Array, acc: jax.Array,
+                    axis: int = 0):
+    """Combine partial Softermax states ``(m, d, acc)`` along ``axis``.
+
+    A partial state is what one pass of the Unnormed Softmax Unit leaves
+    behind after streaming *some subset* of the key columns: the running
+    (Int)Max ``m``, the unnormalized denominator ``d = Σ 2^(s - m)`` and the
+    unnormalized accumulator ``acc = Σ 2^(s - m)·v``. Because every
+    renormalization is a pure exponent shift, two such states merge exactly:
+
+        m*   = max(m₁, m₂)
+        d*   = d₁·2^(m₁-m*) + d₂·2^(m₂-m*)
+        acc* = acc₁·2^(m₁-m*) + acc₂·2^(m₂-m*)
+
+    This operator is associative and commutative (exactly so for the
+    rescales under IntMax — integer exponent adds — and up to fp addition
+    order for the sums), which is what makes flash-decode-style split-K
+    legal for Softermax: KV partitions can be walked by parallel grid lanes
+    in any order and combined afterwards. Empty partitions carry the
+    identity state ``(NEG_INF, 0, 0)`` and drop out of the merge.
+
+    ``m`` and ``d`` must have a trailing singleton where ``acc`` has the
+    feature dim, so the rescale broadcasts. Returns the merged
+    ``(m, d, acc)`` with ``axis`` removed; the caller normalizes via
+    ``softermax_finalize`` (or feeds the state into a further merge).
+    """
+    m_star = jnp.max(m, axis=axis, keepdims=True)
+    # d == 0 marks the identity state; with NEG_INF finite the exp2 is
+    # already 0 (or a harmless 2^0 when *everything* is empty), but the
+    # select keeps the merge identity-exact rather than merely approximate
+    scale = jnp.where(d > 0, exp2(m - m_star), 0.0)
+    d_out = jnp.sum(d * scale, axis=axis)
+    acc_out = jnp.sum(acc * scale, axis=axis)
+    return jnp.squeeze(m_star, axis=axis), d_out, acc_out
+
+
+def softermax_finalize(acc: jax.Array, d: jax.Array) -> jax.Array:
+    """Normalization Unit for a (merged) partial state: ``acc / d`` with
+    fully-masked rows (d == 0) mapped to 0 — the same contract as every
+    kernel epilogue."""
+    return _safe_div(acc, d)
+
+
+# ---------------------------------------------------------------------------
 # 4. Fixed-point softermax (§III.B, Table I bitwidths).
 # ---------------------------------------------------------------------------
 

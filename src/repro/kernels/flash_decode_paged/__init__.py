@@ -1,9 +1,13 @@
 from repro.kernels.flash_decode_paged.flash_decode_paged import (
-    flash_decode_paged)
+    flash_decode_paged, flash_decode_paged_single)
 from repro.kernels.flash_decode_paged.ops import flash_decode_paged_op
 from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
                                                   gather_kv_dequant,
-                                                  paged_decode_ref)
+                                                  paged_decode_ref,
+                                                  paged_decode_split_ref,
+                                                  split_layout)
 
-__all__ = ["flash_decode_paged", "flash_decode_paged_op", "paged_decode_ref",
-           "gather_kv", "gather_scales", "gather_kv_dequant"]
+__all__ = ["flash_decode_paged", "flash_decode_paged_single",
+           "flash_decode_paged_op", "paged_decode_ref",
+           "paged_decode_split_ref", "split_layout", "gather_kv",
+           "gather_scales", "gather_kv_dequant"]

@@ -1,23 +1,54 @@
-"""Jitted public wrapper for paged decode attention."""
+"""Backend dispatch for paged decode attention.
+
+Single dispatcher for every caller (the serving engine's fused decode step
+routes here too):
+
+* TPU backend          — the compiled Pallas kernel: GQA-grouped lanes,
+  ``kv_tile_blocks``-block KV tiles, ``split_k`` parallel partitions merged
+  by the associative Softermax combine.
+* ``interpret=True``   — the same kernel under the Pallas interpreter (CPU
+  CI exercises the exact grid/tile/split dataflow this way).
+* anywhere else        — pure JAX: the gather oracle ``paged_decode_ref``.
+  The tile/split parameters are *layout* knobs, not math knobs — every
+  setting computes the identical attention — so the CPU fallback always
+  runs the single-pass oracle (the fastest XLA evaluation) regardless of
+  the requested tiling; ``paged_decode_split_ref`` exists for parity
+  testing the partition structure itself.
+"""
 from __future__ import annotations
 
 import jax
 
 from repro.kernels.flash_decode_paged.flash_decode_paged import (
-    flash_decode_paged)
+    flash_decode_paged, flash_decode_paged_single)
 from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
                                                   gather_kv_dequant,
-                                                  paged_decode_ref)
+                                                  paged_decode_ref,
+                                                  paged_decode_split_ref)
 
 
 def flash_decode_paged_op(q, k_pool, v_pool, block_tables, lengths, *,
                           k_scale=None, v_scale=None,
                           intmax: bool = True,
+                          kv_tile_blocks: int = 1,
+                          split_k: int = 1,
                           interpret: bool = False) -> jax.Array:
-    return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
-                              k_scale=k_scale, v_scale=v_scale,
-                              intmax=intmax, interpret=interpret)
+    if interpret:
+        return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  intmax=intmax,
+                                  kv_tile_blocks=kv_tile_blocks,
+                                  split_k=split_k, interpret=True)
+    if jax.default_backend() == "tpu":
+        return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  intmax=intmax,
+                                  kv_tile_blocks=kv_tile_blocks,
+                                  split_k=split_k)
+    return paged_decode_ref(q, k_pool, v_pool, block_tables, lengths,
+                            k_scale=k_scale, v_scale=v_scale, intmax=intmax)
 
 
-__all__ = ["flash_decode_paged_op", "paged_decode_ref", "gather_kv",
-           "gather_scales", "gather_kv_dequant"]
+__all__ = ["flash_decode_paged_op", "paged_decode_ref",
+           "paged_decode_split_ref", "flash_decode_paged_single",
+           "gather_kv", "gather_scales", "gather_kv_dequant"]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the paged decode kernel.
+"""Pure-jnp oracles for the paged decode kernel.
 
 ``gather_kv`` materializes a request's logical cache from the pool through
 its block table; ``paged_decode_ref`` is then exactly the contiguous decode
@@ -6,13 +6,44 @@ oracle on the gathered cache. This is also the CPU execution path of the
 serving engine (``serve/paged_step.py``) — XLA turns the block-table gather
 into one take per step, and the attention math is bit-for-bit the contiguous
 ``_masked_decode`` computation.
+
+**Grouped-gather cost faithfulness.** Every oracle here gathers KV exactly
+once per *KV* head — ``pool[block_tables]`` pulls all ``Hkv`` heads of a
+block in one take — and queries are reshaped to ``(B, Hkv, group, …)`` so
+the group dimension rides the einsum batch axes; KV is never expanded
+(repeated/broadcast-materialized) across the query group. That is the same
+operand-movement shape as the grouped Pallas kernel's one-gather-per-group
+lanes, so the refs stay cost-faithful oracles, not just numeric ones.
+
+``paged_decode_split_ref`` mirrors the kernel's split-K structure: the
+(padded) KV walk is cut into ``split_k`` partitions, each reduced to its
+partial ``(m, d, acc)`` state in closed form, and the partials are combined
+with the associative Softermax merge (``core.softermax.softermax_merge``)
+— the exact contract the kernel's parallel split lanes + jnp combine stage
+implement, including the identity state ``(NEG_INF, 0, 0)`` for partitions
+that sit entirely past a sequence's length.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import NEG_INF
+from repro.core.softermax import softermax_finalize, softermax_merge
 from repro.kernels.flash_decode.ref import decode_ref
+
+
+def split_layout(W: int, kv_tile_blocks: int, split_k: int):
+    """THE clamped tile/split geometry for a table of ``W`` blocks —
+    ``(T, S, spl, Wp)``: T blocks per kv tile, S split lanes of ``spl``
+    tiles each, table padded to ``Wp = S*spl*T`` blocks. The kernel
+    wrapper, the split oracle, and the decode bench's gather-traffic model
+    must all partition identically, so the derivation lives here once."""
+    T = max(1, min(kv_tile_blocks, W))
+    tiles = -(-W // T)
+    S = max(1, min(split_k, tiles))
+    spl = -(-tiles // S)
+    return T, S, spl, S * spl * T
 
 
 def gather_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
@@ -59,3 +90,56 @@ def paged_decode_ref(
     k = gather_kv_dequant(k_pool, k_scale, block_tables)
     v = gather_kv_dequant(v_pool, v_scale, block_tables)
     return decode_ref(q, k, v, lengths, intmax=intmax)
+
+
+def paged_decode_split_ref(
+    q: jax.Array,             # (B, Hq, D) pre-scaled
+    k_pool: jax.Array,        # (N, Hkv, BS, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, W) int32
+    lengths: jax.Array,       # (B,) int32
+    *,
+    split_k: int = 1,
+    kv_tile_blocks: int = 1,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
+    intmax: bool = True,
+) -> jax.Array:
+    """Partition-structured oracle for the split-K kernel: pads the table
+    the way the kernel wrapper does (to ``split_k * spl * kv_tile_blocks``
+    blocks, pad entries = garbage block 0), reduces each partition to its
+    partial ``(m, d, acc)`` in closed form, and merges with
+    ``softermax_merge``. Numerically equal to ``paged_decode_ref`` up to fp
+    reduction order (exactly equal where IntMax makes every rescale an
+    integer exponent add and each partition's sums coincide)."""
+    B, Hq, D = q.shape
+    _, Hkv, BS, _ = k_pool.shape
+    W = block_tables.shape[1]
+    G = Hq // Hkv
+
+    _, S, _, Wp = split_layout(W, kv_tile_blocks, split_k)
+    bt = jnp.pad(block_tables.astype(jnp.int32), ((0, 0), (0, Wp - W)))
+
+    k = gather_kv_dequant(k_pool, k_scale, bt)     # (B, Hkv, Wp*BS, D)
+    v = gather_kv_dequant(v_pool, v_scale, bt)
+    P = (Wp * BS) // S                             # columns per partition
+    k = k.reshape(B, Hkv, S, P, D)
+    v = v.reshape(B, Hkv, S, P, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhspd->bhgsp", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    kj = jnp.arange(Wp * BS, dtype=jnp.int32).reshape(S, P)
+    valid = kj[None] < lengths.astype(jnp.int32)[:, None, None]  # (B, S, P)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)         # (B, Hkv, G, S, 1)
+    m = jnp.ceil(m) if intmax else m
+    # masked columns contribute exactly 0 (exp2(NEG_INF - m) underflows),
+    # but a *fully* masked partition would see exp2(0) = 1 per column —
+    # zero those explicitly so empty partitions carry the merge identity
+    p = jnp.where(valid[:, None, None, :, :], jnp.exp2(s - m), 0.0)
+    d = jnp.sum(p, axis=-1, keepdims=True)         # (B, Hkv, G, S, 1)
+    m = jnp.where(d > 0, m, NEG_INF)               # identity for empties
+    acc = jnp.einsum("bhgsp,bhspd->bhgsd", p, v.astype(jnp.float32))
+    _, d2, acc2 = softermax_merge(m, d, acc, axis=3)
+    o = softermax_finalize(acc2, d2)               # (B, Hkv, G, D)
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -12,6 +12,10 @@ here too):
   contract — exact cover or chunk-quantized; see ref.py). Identical math
   either way, so CPU serving stays fast (the interpreter is orders of
   magnitude slower than XLA on the same shapes).
+
+``kv_tile_blocks`` is a kernel *layout* knob (pool blocks gathered per kv
+grid step), not a math knob — the pure-JAX fallbacks compute the identical
+attention and ignore it.
 """
 from __future__ import annotations
 
@@ -28,17 +32,21 @@ from repro.kernels.flash_prefill_paged.ref import (paged_prefill_ref,
 def flash_prefill_paged_op(q, k_pool, v_pool, block_tables, q_pos0, *,
                            k_scale=None, v_scale=None,
                            intmax: bool = True,
+                           kv_tile_blocks: int = 1,
                            interpret: bool = False,
                            split_tail_blocks: Optional[int] = None
                            ) -> jax.Array:
     if interpret:
         return flash_prefill_paged(q, k_pool, v_pool, block_tables, q_pos0,
                                    k_scale=k_scale, v_scale=v_scale,
-                                   intmax=intmax, interpret=True)
+                                   intmax=intmax,
+                                   kv_tile_blocks=kv_tile_blocks,
+                                   interpret=True)
     if jax.default_backend() == "tpu":
         return flash_prefill_paged(q, k_pool, v_pool, block_tables, q_pos0,
                                    k_scale=k_scale, v_scale=v_scale,
-                                   intmax=intmax)
+                                   intmax=intmax,
+                                   kv_tile_blocks=kv_tile_blocks)
     if split_tail_blocks is not None:
         return paged_prefill_split_ref(q, k_pool, v_pool, block_tables,
                                        q_pos0,

@@ -58,6 +58,21 @@ def main() -> None:
                          "prefilling request always advances), so many "
                          "concurrent long prompts can't starve decodes; "
                          "0 = one chunk per prefilling request per step")
+    ap.add_argument("--kv-tile-blocks", type=int, default=1,
+                    help="paged engine: pool blocks gathered per kv grid "
+                         "step of the paged Pallas kernels (raise until "
+                         "kv_tile_blocks * block_size >= 128 so decode "
+                         "streams MXU-shaped KV tiles; layout-only — same "
+                         "attention, same visit order, identical outputs)")
+    ap.add_argument("--decode-split-k", type=int, default=1,
+                    help="paged engine: partition each decode lane's KV "
+                         "walk across this many parallel grid lanes, "
+                         "merged by the associative Softermax combine — "
+                         "cuts a long-context request's decode latency by "
+                         "~the split factor on TPU (same attention; the "
+                         "rescales are exact power-of-two shifts, the "
+                         "partition sums reassociate within fp rounding — "
+                         "a greedy flip needs an exact logit tie)")
     ap.add_argument("--kv-dtype", choices=("auto", "bf16", "int8"),
                     default="auto",
                     help="paged engine KV pool storage: 'auto' follows "
@@ -92,7 +107,9 @@ def main() -> None:
                 evict_policy=args.evict_policy,
                 prefill_chunk=args.prefill_chunk,
                 prefill_budget=args.prefill_budget,
-                kv_dtype=None if args.kv_dtype == "auto" else args.kv_dtype)
+                kv_dtype=None if args.kv_dtype == "auto" else args.kv_dtype,
+                kv_tile_blocks=args.kv_tile_blocks,
+                decode_split_k=args.decode_split_k)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
                        for p in prompts]

@@ -61,7 +61,8 @@ from repro.serve.kv_pool import PagedKVCache
 from repro.serve.paged_step import (check_paged_support, paged_decode_step,
                                     paged_prefill, paged_prefill_chunked,
                                     paged_prefill_suffix, scatter_prefill,
-                                    scatter_prefill_offset)
+                                    scatter_prefill_offset,
+                                    table_width_bucket)
 from repro.serve.radix_cache import RadixCache
 from repro.serve.scheduler import PREFILL, Request, Scheduler
 
@@ -174,7 +175,8 @@ class ContinuousEngine:
                  max_admit_per_step: int = 2, seed: int = 0,
                  prefix_cache: bool = True, evict_policy: str = "lru",
                  prefill_chunk: int = 0, prefill_budget: int = 0,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 kv_tile_blocks: int = 1, decode_split_k: int = 1):
         check_paged_support(cfg)
         self.cfg = cfg
         if cfg.opt_bf16_params:
@@ -205,6 +207,23 @@ class ContinuousEngine:
             raise ValueError(f"prefill_budget must be >= 0, "
                              f"got {prefill_budget}")
         self.prefill_budget = prefill_budget
+        # Kernel grid knobs (layout, not math — every setting computes the
+        # same attention; tiling preserves the visit order exactly, split-K
+        # reassociates the partition sums within fp rounding, the rescales
+        # staying exact power-of-two shifts): ``kv_tile_blocks`` pool
+        # blocks are gathered
+        # per kv grid step of both paged kernels (T*block_size >= 128 rows
+        # makes MXU-shaped tiles), and decode's KV walk is partitioned
+        # across ``decode_split_k`` parallel lanes merged by the
+        # associative Softermax combine. Both only reach the Pallas
+        # kernels (TPU / interpret_kernels); the CPU ref path ignores
+        # them. See serve/README.md "Kernel grid & tiling".
+        if kv_tile_blocks < 1 or decode_split_k < 1:
+            raise ValueError(
+                f"kv_tile_blocks and decode_split_k must be >= 1, got "
+                f"{kv_tile_blocks}/{decode_split_k}")
+        self.kv_tile_blocks = kv_tile_blocks
+        self.decode_split_k = decode_split_k
         # KV pool storage: None/"auto" follow cfg.opt_int8_kv (the
         # --optimized serving path falls back to the compute dtype when the
         # flag is off); "bf16"/"int8" force that storage. Resolution lives
@@ -251,6 +270,8 @@ class ContinuousEngine:
 
         def _decode_fn(p, t, bt, ln, *pools):
             out = paged_decode_step(p, t, pools[0], pools[1], bt, ln, cfg,
+                                    kv_tile_blocks=self.kv_tile_blocks,
+                                    decode_split_k=self.decode_split_k,
                                     **_sc(pools))
             return (_amax(out[0]), out[0]) + tuple(out[1:])
 
@@ -263,6 +284,7 @@ class ContinuousEngine:
         def _prefill_chunk_fn(p, t, pos0, last_rel, pt, blk, off, *pools):
             out = paged_prefill_chunked(p, t, pos0, last_rel, pools[0],
                                         pools[1], pt, blk, off, cfg,
+                                        kv_tile_blocks=self.kv_tile_blocks,
                                         **_sc(pools))
             return (_amax(out[0]), out[0]) + tuple(out[1:])
 
@@ -326,7 +348,11 @@ class ContinuousEngine:
             # outputs are garbage, but they are finite and discarded)
             C = self.prefill_chunk
             cq = C // self.block_size
-            for w in range(cq, self.nb_max + cq, cq):
+            # exactly the serve-time bucket set: every cover width any
+            # in-range request can produce, through the one shared policy
+            widths = sorted({table_width_bucket(n, chunk_blocks=cq)
+                             for n in range(1, self.nb_max + 1)})
+            for w in widths:
                 _, _, *pools = self._prefill_chunk_fn(
                     self.params, zeros((1, C), jnp.int32),
                     jnp.asarray(0, jnp.int32),
@@ -344,17 +370,13 @@ class ContinuousEngine:
                 self._set_pools(self._scatter(ks, vs,
                                               zeros((nb,), jnp.int32),
                                               *self._pools()))
-        w = 1
-        while True:
-            w = min(w, self.nb_max)
+        for w in sorted({table_width_bucket(n, nb_max=self.nb_max)
+                         for n in range(1, self.nb_max + 1)}):
             _, _, *pools = self._decode(
                 self.params, zeros((self.max_batch,), jnp.int32),
                 zeros((self.max_batch, w), jnp.int32),
                 zeros((self.max_batch,), jnp.int32), *self._pools())
             self._set_pools(pools)
-            if w == self.nb_max:
-                break
-            w *= 2
 
         bs = self.block_size
         for nb in range(1, self.nb_max + 1):
@@ -596,11 +618,10 @@ class ContinuousEngine:
         table = np.asarray(self.pool.blocks_of(req.req_id), np.int32)
         cover = -(-(m + sl) // bs)       # blocks holding positions < m+sl
         # chunk tables bucket to multiples of the chunk's own block count
-        # (not pow2): buckets stay bounded (nb_max / chunk-blocks of them)
-        # AND the pad never exceeds the masked tail region the CPU split
-        # path assumes — see paged_prefill_chunked's table contract
+        # (not pow2) — see table_width_bucket for why that bound is also
+        # the paged_prefill_chunked table contract
         cq = C // bs
-        w = -(-cover // cq) * cq
+        w = table_width_bucket(cover, chunk_blocks=cq)
         pt = np.zeros((1, w), np.int32)
         pt[0, :cover] = table[:cover]
         pos = m + np.arange(C)
@@ -665,13 +686,9 @@ class ContinuousEngine:
         self.metrics.tokens_out += 1
 
     def _pow2_bucket(self, need: int) -> int:
-        """Block-table width bucket: next power of two covering ``need``,
-        clamped to nb_max (few jit buckets instead of every width; the
-        clamp never truncates — any in-range table fits in nb_max)."""
-        w = 1
-        while w < need:
-            w *= 2
-        return max(min(w, self.nb_max), need)
+        """Decode/suffix table width via the stack-wide bucketing policy
+        (``serve/paged_step.table_width_bucket``)."""
+        return table_width_bucket(need, nb_max=self.nb_max)
 
     def _table_width(self, occ) -> int:
         """Decode block-table width covering the longest running request."""

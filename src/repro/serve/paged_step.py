@@ -53,15 +53,14 @@ return the new scale tensors after the new pools (callers unpack by mode).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.numerics import NEG_INF
-from repro.kernels.flash_decode_paged import (flash_decode_paged,
-                                              paged_decode_ref)
+from repro.kernels.flash_decode_paged import flash_decode_paged_op
 from repro.kernels.flash_decode_paged.ref import gather_kv_dequant
 from repro.kernels.flash_prefill_paged import flash_prefill_paged_op
 from repro.models import attention as attn_mod
@@ -83,6 +82,42 @@ def check_paged_support(cfg: ModelConfig) -> None:
                          "not supported")
     if cfg.window:
         raise ValueError("paged serving: sliding-window archs not supported")
+
+
+def table_width_bucket(need: int, *, nb_max: Optional[int] = None,
+                       chunk_blocks: Optional[int] = None) -> int:
+    """THE block-table width policy for the whole serving stack — engine
+    decode/suffix tables, chunked-prefill covers, warmup shape enumeration,
+    and the benches' engine-faithful replay all quantize through this one
+    helper, so jit bucket counts stay bounded and the split-ref table
+    contract lives in one place.
+
+    * ``chunk_blocks`` set — chunked-prefill cover policy: round ``need``
+      up to a multiple of the chunk's own block count (``nb_max`` is
+      ignored — a cover never exceeds the request's own table). Bucket
+      count stays bounded (max-table / chunk_blocks of them) AND the pad
+      never exceeds the masked tail region the CPU split oracle assumes —
+      this is exactly the ``paged_prefill_chunked`` table contract
+      (``paged_prefill_split_ref``'s CONTRACT note), so changing the
+      policy here is changing the contract.
+    * otherwise — pow2 policy (decode and one-shot suffix tables): next
+      power of two covering ``need``, clamped to ``nb_max`` (few buckets
+      instead of every width; the clamp never truncates — any in-range
+      table fits in ``nb_max`` blocks).
+    """
+    if chunk_blocks is not None:
+        # a 0 here would silently fall through to the pow2 policy and
+        # break the split-ref contract — fail loudly instead
+        if chunk_blocks < 1:
+            raise ValueError(f"chunk_blocks must be >= 1, "
+                             f"got {chunk_blocks}")
+        return -(-need // chunk_blocks) * chunk_blocks
+    w = 1
+    while w < need:
+        w *= 2
+    if nb_max is not None:
+        w = max(min(w, nb_max), need)
+    return w
 
 
 # ---------------------------------------------------------------------------
@@ -352,7 +387,7 @@ def scatter_prefill_offset(
 
 
 def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax,
-                     ksc_l=None, vsc_l=None):
+                     ksc_l=None, vsc_l=None, kv_tile_blocks=1):
     """Chunk queries over block-table-resident KV through the one shared
     dispatcher: Pallas kernel on TPU / under ``cfg.interpret_kernels``;
     elsewhere the pure-JAX split oracle, which skips the causal mask on
@@ -364,6 +399,7 @@ def _chunk_attention(q, k_pool_l, v_pool_l, table, pos0, cfg, intmax,
     return flash_prefill_paged_op(q, k_pool_l, v_pool_l, table, pos0,
                                   k_scale=ksc_l, v_scale=vsc_l,
                                   intmax=intmax,
+                                  kv_tile_blocks=kv_tile_blocks,
                                   interpret=cfg.interpret_kernels,
                                   split_tail_blocks=tail)
 
@@ -388,6 +424,7 @@ def paged_prefill_chunked(
     cfg: ModelConfig,
     k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
     v_scale: jax.Array = None,
+    kv_tile_blocks: int = 1,     # static: pool blocks per kernel kv step
 ):
     """One chunk of a chunked prefill. Per layer: scatter the chunk's K/V
     rows into the pool at (blk, off) — pad rows route to garbage block 0 —
@@ -442,7 +479,7 @@ def paged_prefill_chunked(
             rows_v.astype(vp_l.dtype))
         q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
         o = _chunk_attention(q, kp_l, vp_l, table, qpos0, cfg, intmax,
-                             ksc_l, vsc_l)
+                             ksc_l, vsc_l, kv_tile_blocks)
         y = attn_mod._out_proj(bp["mixer"], o, cfg)
         x = x + y
         h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
@@ -476,17 +513,18 @@ def paged_prefill_chunked(
 
 
 def _paged_attention(q, k_pool_l, v_pool_l, block_tables, new_len, cfg,
-                     intmax, ksc_l=None, vsc_l=None):
-    if cfg.interpret_kernels:
-        return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
-                                  new_len, k_scale=ksc_l, v_scale=vsc_l,
-                                  intmax=intmax, interpret=True)
-    if jax.default_backend() == "tpu":
-        return flash_decode_paged(q, k_pool_l, v_pool_l, block_tables,
-                                  new_len, k_scale=ksc_l, v_scale=vsc_l,
-                                  intmax=intmax)
-    return paged_decode_ref(q, k_pool_l, v_pool_l, block_tables, new_len,
-                            k_scale=ksc_l, v_scale=vsc_l, intmax=intmax)
+                     intmax, ksc_l=None, vsc_l=None, kv_tile_blocks=1,
+                     split_k=1):
+    """Fused-batch decode attention through the one shared dispatcher
+    (``kernels/flash_decode_paged/ops.py``): grouped/tiled/split Pallas
+    kernel on TPU or under ``cfg.interpret_kernels``, the pure-JAX gather
+    oracle elsewhere (tile/split are layout knobs — same math)."""
+    return flash_decode_paged_op(q, k_pool_l, v_pool_l, block_tables,
+                                 new_len, k_scale=ksc_l, v_scale=vsc_l,
+                                 intmax=intmax,
+                                 kv_tile_blocks=kv_tile_blocks,
+                                 split_k=split_k,
+                                 interpret=cfg.interpret_kernels)
 
 
 def paged_decode_step(
@@ -499,6 +537,8 @@ def paged_decode_step(
     cfg: ModelConfig,
     k_scale: jax.Array = None,   # (L, N, Hkv, BS) f32 scale pools (int8)
     v_scale: jax.Array = None,
+    kv_tile_blocks: int = 1,     # static: pool blocks per kernel kv step
+    decode_split_k: int = 1,     # static: parallel KV partitions per lane
 ):
     """One continuous-batch decode step.
 
@@ -558,7 +598,8 @@ def paged_decode_step(
             v.astype(vp_l.dtype))
         q = q * jnp.asarray(premult * dh ** -0.5, q.dtype)
         o = _paged_attention(q, kp_l, vp_l, block_tables, new_len, cfg,
-                             intmax, ksc_l, vsc_l)
+                             intmax, ksc_l, vsc_l, kv_tile_blocks,
+                             decode_split_k)
         y = jnp.einsum("bhk,hkd->bd", o, bp["mixer"]["wo"].astype(dt))
         x1 = x1 + y
         h2 = rmsnorm(bp["ln2"], x1, cfg.norm_eps)

@@ -61,6 +61,27 @@ class TestFlashPrefillPagedKernel:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-5)
 
+    @pytest.mark.parametrize("T", [1, 2, 4])
+    def test_multi_block_tiles_match_ref(self, T):
+        """kv_tile_blocks is layout-only: T pool blocks per kv grid step
+        (table padded to a tile multiple with garbage block 0, pad tiles
+        skipped above the diagonal) computes the identical attention on
+        ragged geometry — odd suffix, mid-block start, non-tile-multiple
+        table width."""
+        B, Hq, Hkv, D, BS, Sq, bq = 2, 8, 2, 16, 8, 19, 8
+        pos0s = (11, 26)
+        W = -(-(max(pos0s) + Sq) // BS)
+        assert W % T or T == 1 or W // T > 1   # keep the ragged case real
+        kp, vp, bt = _random_paged_kv(B, Hkv, D, BS, W)
+        q = jnp.asarray(_rng.normal(size=(B, Hq, Sq, D)),
+                        jnp.float32) / np.sqrt(D)
+        pos0 = jnp.asarray(pos0s, jnp.int32)
+        got = flash_prefill_paged(q, kp, vp, bt, pos0, interpret=True,
+                                  block_q=bq, kv_tile_blocks=T)
+        want = paged_prefill_ref(q, kp, vp, bt, pos0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
     def test_ref_matches_dense_suffix_attention(self):
         """The single-table positional-causal oracle computes the same
         attention as PR-2's gather-and-concat ``_suffix_attention`` when
