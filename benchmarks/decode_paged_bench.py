@@ -232,8 +232,10 @@ def main(argv=None) -> float:
     if not args.smoke:
         assert ratio >= 1.5, (
             f"grouped/tiled/split decode speedup {ratio:.2f}x < 1.5x")
+        from benchmarks.provenance import provenance
         record = {
             "bench": "decode_paged",
+            "provenance": provenance(mode=meta["mode"]),
             "workload": {
                 "requests": args.requests, "hq": args.hq, "hkv": args.hkv,
                 "head_dim": args.head_dim, "block_size": args.block_size,

@@ -226,8 +226,10 @@ def main(argv=None) -> float:
             f"equal-HBM token capacity {cap_ratio:.2f}x < 1.8x")
         assert ratio >= 1.3, (
             f"int8 served tok/s {ratio:.2f}x < 1.3x at equal HBM")
+        from benchmarks.provenance import provenance
         record = {
             "bench": "kv_int8",
+            "provenance": provenance(mode="measured"),
             "workload": {"requests": args.requests,
                          "prompt_len": args.prompt_len,
                          "max_new": args.max_new,

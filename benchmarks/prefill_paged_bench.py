@@ -260,8 +260,10 @@ def main(argv=None) -> float:
     if not args.smoke:
         assert ratio >= 2.0, (
             f"chunked prefill speedup {ratio:.2f}x < 2.0x")
+        from benchmarks.provenance import provenance
         record = {
             "bench": "prefill_paged",
+            "provenance": provenance(mode="measured"),
             "workload": {"requests": args.requests,
                          "shared_len": args.shared_len,
                          "doc_len": args.doc_len, "chunk": args.chunk,

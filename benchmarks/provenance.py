@@ -1,0 +1,50 @@
+"""Shared provenance header for every benchmark artifact.
+
+Every ``BENCH_*.json`` writer stamps its record with ``provenance()`` so a
+result file is self-describing: which commit produced it, when, on what
+jax/platform, and in which measurement mode. Comparing two artifacts from
+different commits (the perf-compare tooling, CI uploads) starts by diffing
+this block.
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+from typing import Dict, Optional
+
+
+def git_commit() -> Optional[str]:
+    """Current HEAD hash (+ ``-dirty`` suffix), or None outside a repo."""
+    try:
+        head = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        return head + ("-dirty" if dirty else "")
+    except Exception:
+        return None
+
+
+def provenance(mode: Optional[str] = None) -> Dict[str, object]:
+    """The shared artifact header. ``mode`` is the bench's measurement
+    mode ("measured" / "smoke" / "interpret" ...), recorded so smoke
+    artifacts can't be mistaken for real measurements."""
+    import jax
+
+    out: Dict[str, object] = {
+        "git_commit": git_commit(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device": jax.devices()[0].device_kind,
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+    }
+    if mode is not None:
+        out["measurement_mode"] = mode
+    return out

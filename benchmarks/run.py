@@ -18,6 +18,12 @@ def main() -> None:
     from benchmarks import (fig1_breakdown, fig5_sweep, roofline_report,
                             table1_bitwidth_ablation, table3_accuracy,
                             table4_efficiency)
+    from benchmarks.provenance import provenance
+
+    import json
+    print("# provenance:",
+          json.dumps(provenance(mode="smoke" if args.fast else "measured"),
+                     sort_keys=True))
 
     t0 = time.time()
     print("# Table IV — unit/PE area+energy (analytical 7nm model vs paper)")

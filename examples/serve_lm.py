@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from repro.models.registry import get_config, model_fns, reduce_config
-from repro.serve import ContinuousEngine
+from repro.serve import ContinuousEngine, Telemetry
 
 
 def main():
@@ -46,13 +46,15 @@ def main():
         cfg = reduce_config(cfg)
     fns = model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0))
+    tel = Telemetry()
     eng = ContinuousEngine(
         cfg, params, block_size=args.block_size,
         num_blocks=args.num_blocks, max_batch=args.requests,
         max_len=args.shared_prefix + args.prompt_len + args.max_new,
         prefix_cache=not args.no_prefix_cache,
         kv_tile_blocks=args.kv_tile_blocks,
-        decode_split_k=args.decode_split_k)
+        decode_split_k=args.decode_split_k,
+        telemetry=tel)
 
     rng = np.random.default_rng(0)
     # mixed lengths: the whole point of per-request paged admission
@@ -85,6 +87,21 @@ def main():
               f"{m.shared_blocks_peak}, {m.cow_copies} COW copies, "
               f"{cs.evictions} evictions, "
               f"{eng.prefix_cache.cached_blocks} blocks cached at exit")
+    # per-request latency table from the telemetry traces (same data the
+    # registry aggregates into the p50/p90/p99 histograms)
+    print(f"{'req':>4} {'prompt':>6} {'hit':>4} {'ttft_ms':>8} "
+          f"{'tpot_ms':>8} {'e2e_ms':>8} {'toks':>5} {'preempt':>7}")
+    for tr in sorted(tel.finished_traces, key=lambda t: t.req_id):
+        print(f"{tr.req_id:>4} {tr.prompt_len:>6} {tr.n_prefix_hit:>4} "
+              f"{tr.ttft * 1e3:>8.1f} {tr.tpot_mean * 1e3:>8.2f} "
+              f"{tr.e2e * 1e3:>8.1f} {tr.n_tokens:>5} "
+              f"{tr.n_preemptions:>7}")
+    snap = tel.registry.snapshot()
+    print(f"registry: cache_hit_tokens={snap.get('cache_hit_tokens', 0):.0f} "
+          f"cache_hit_rate={snap.get('cache_hit_rate', 0.0):.2f} "
+          f"pool_cow_copies={snap.get('pool_cow_copies', 0):.0f} "
+          f"ttft_p99_ms={snap['serve_ttft_seconds']['p99'] * 1e3:.1f} "
+          f"tpot_p99_ms={snap['serve_tpot_seconds']['p99'] * 1e3:.2f}")
     for h in handles[:2]:
         r = results[h.req_id]
         print(f"req{h.req_id} (ttft {r.ttft * 1e3:.0f}ms): {r.tokens}")

@@ -170,6 +170,18 @@ def lpw_reciprocal(d: jax.Array, out_fmt: QFormat = DEFAULT_BITWIDTHS.recip) -> 
     return jnp.where(d > 0, val, 0.0)
 
 
+def qformat_clip_count(x: jax.Array, fmt: QFormat,
+                       where: Optional[jax.Array] = None) -> jax.Array:
+    """Number of entries a saturating cast to ``fmt`` would clip — the
+    telemetry overflow counters (serve numerics monitors) are built on
+    this. ``where`` masks entries that don't participate (e.g. causally
+    invalid score positions holding NEG_INF sentinels)."""
+    hit = (x > fmt.max_value) | (x < fmt.min_value)
+    if where is not None:
+        hit = jnp.logical_and(hit, where)
+    return jnp.sum(hit)
+
+
 # ---------------------------------------------------------------------------
 # Int8 QAT with percentile calibration (§V, "99.999% percentile calibrator").
 # ---------------------------------------------------------------------------

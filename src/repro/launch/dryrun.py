@@ -62,6 +62,18 @@ def _sharding_tree(specs_tree, abstract_tree, rules, mesh):
             isinstance(e, (str, type(None))) for e in x))
 
 
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` returns a dict on recent jax but a
+    one-element list of dicts on older versions — normalize to a dict."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _memory_analysis_dict(compiled) -> Dict[str, Optional[float]]:
     try:
         ma = compiled.memory_analysis()
@@ -178,9 +190,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "memory_analysis": _memory_analysis_dict(compiled),
-        "cost_analysis": {k: float(v) for k, v in (
-            compiled.cost_analysis() or {}).items()
-            if isinstance(v, (int, float))},
+        "cost_analysis": {k: float(v) for k, v in
+                          _cost_analysis_dict(compiled).items()
+                          if isinstance(v, (int, float))},
         "roofline": roof.to_dict(),
     }
     return compiled, report

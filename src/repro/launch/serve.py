@@ -3,6 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --engine paged --batch 8 --prompt-len 32 --max-new 16 \
         --block-size 16 --num-blocks 128
+
+Observability (paged engine): ``--metrics-out metrics.prom`` (or
+``.jsonl``) exports the metric registry, ``--trace-out trace.json`` writes
+the Perfetto-loadable step timeline, ``--numerics-every N`` turns on the
+int8 numerics monitor; any of these implies ``--telemetry``. See
+serve/README.md "Observability" for the metric glossary.
 """
 from __future__ import annotations
 
@@ -81,6 +87,25 @@ def main() -> None:
                          "stores K/V as int8 with per-row scales — half "
                          "the gather bytes, ~2x tokens at equal HBM — "
                          "dequantized inside the paged kernels")
+    ap.add_argument("--telemetry", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="paged engine: per-request tracing + metric "
+                         "registry + step timeline (serve/telemetry.py). "
+                         "Defaults on when --metrics-out/--trace-out is "
+                         "given, off otherwise (disabled hooks are free)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metric-registry state here: "
+                         "*.jsonl appends one snapshot line (JSONL sink), "
+                         "anything else gets Prometheus text exposition")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the step timeline as Chrome trace-event "
+                         "JSON (load in chrome://tracing or Perfetto)")
+    ap.add_argument("--numerics-every", type=int, default=0, metavar="N",
+                    help="telemetry: audit every Nth prefill on an int8 "
+                         "pool — lockstep full-precision vs int8 forward "
+                         "publishing the live logit-error gauge plus "
+                         "IntMax-overflow / scale-saturation counters "
+                         "(0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -99,6 +124,13 @@ def main() -> None:
                                (args.batch, args.prompt_len)).astype(np.int32)
         t0 = time.time()
         if args.engine == "paged":
+            want_tel = args.telemetry if args.telemetry is not None else \
+                bool(args.metrics_out or args.trace_out
+                     or args.numerics_every)
+            tel = None
+            if want_tel:
+                from repro.serve import Telemetry
+                tel = Telemetry(numerics_every=args.numerics_every)
             eng = ContinuousEngine(
                 cfg, params, block_size=args.block_size,
                 num_blocks=args.num_blocks, max_batch=args.batch,
@@ -109,7 +141,8 @@ def main() -> None:
                 prefill_budget=args.prefill_budget,
                 kv_dtype=None if args.kv_dtype == "auto" else args.kv_dtype,
                 kv_tile_blocks=args.kv_tile_blocks,
-                decode_split_k=args.decode_split_k)
+                decode_split_k=args.decode_split_k,
+                telemetry=tel)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
                        for p in prompts]
@@ -140,6 +173,26 @@ def main() -> None:
                          eng.metrics.shared_blocks_peak,
                          eng.metrics.cow_copies, cs.evictions,
                          eng.metrics.prefill_savings)
+            if tel is not None:
+                for nm in ("ttft", "tpot", "e2e"):
+                    q = tel.quantiles(nm)
+                    log.info("%s: p50 %.1fms p90 %.1fms p99 %.1fms "
+                             "(n=%d)", nm, q["p50"] * 1e3, q["p90"] * 1e3,
+                             q["p99"] * 1e3, q["count"])
+                err = tel.registry.get("numerics_logit_error_max")
+                if err is not None:
+                    log.info("numerics: max |full - int8| logit delta "
+                             "%.4f over %d probes", err.value,
+                             tel.c_probes.value)
+                if args.metrics_out:
+                    tel.save_metrics(args.metrics_out,
+                                     extra={"arch": cfg.name,
+                                            "engine": "paged"})
+                    log.info("metrics -> %s", args.metrics_out)
+                if args.trace_out:
+                    tel.save_chrome_trace(args.trace_out,
+                                          meta={"arch": cfg.name})
+                    log.info("step timeline -> %s", args.trace_out)
         else:
             eng = ServeEngine(cfg, params,
                               max_len=args.prompt_len + args.max_new)

@@ -1,0 +1,37 @@
+"""jax moved ``jax.experimental.shard_map.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` to ``check_vma``); resolve whichever this jax
+has so the shard_map call sites work across versions. Same treatment for
+``AbstractMesh``, whose constructor went from ``(((name, size), ...))``
+pairs to ``(axis_sizes, axis_names)``."""
+from __future__ import annotations
+
+import inspect
+from typing import Tuple
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def abstract_mesh(axis_sizes: Tuple[int, ...],
+                  axis_names: Tuple[str, ...]):
+    """Device-free mesh for sharding-rule evaluation, any jax version."""
+    from jax.sharding import AbstractMesh
+    first = [p for p in
+             inspect.signature(AbstractMesh.__init__).parameters
+             if p != "self"][0]
+    if first == "shape_tuple":          # <= 0.4.x: ((name, size), ...)
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return AbstractMesh(axis_sizes, axis_names)
+
+
+__all__ = ["shard_map", "abstract_mesh"]

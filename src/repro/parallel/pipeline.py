@@ -23,6 +23,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from repro.parallel.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -86,7 +87,7 @@ def pipeline_apply(
 
     inner = functools.partial(_pipeline_inner, stage_fn=stage_fn,
                               axis_name=axis_name, n_stages=n)
-    out = jax.shard_map(
+    out = shard_map(
         inner, mesh=mesh,
         in_specs=(param_specs, P()),
         out_specs=P(),

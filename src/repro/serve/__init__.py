@@ -1,9 +1,16 @@
 from repro.serve.engine import (ContinuousEngine, EngineMetrics,
                                 GenerateResult, ServeEngine)
 from repro.serve.kv_pool import PagedKVCache, PoolExhausted, PoolStats
+from repro.serve.metrics import (Counter, Gauge, Histogram, MetricRegistry,
+                                 parse_prometheus_text)
 from repro.serve.radix_cache import CacheStats, RadixCache
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.telemetry import (ManualClock, RequestTrace, StepTimeline,
+                                   Telemetry)
 
 __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
            "ServeEngine", "PagedKVCache", "PoolExhausted", "PoolStats",
-           "RadixCache", "CacheStats", "Request", "Scheduler"]
+           "RadixCache", "CacheStats", "Request", "Scheduler",
+           "Counter", "Gauge", "Histogram", "MetricRegistry",
+           "parse_prometheus_text", "ManualClock", "RequestTrace",
+           "StepTimeline", "Telemetry"]

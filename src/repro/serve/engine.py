@@ -65,6 +65,7 @@ from repro.serve.paged_step import (check_paged_support, paged_decode_step,
                                     table_width_bucket)
 from repro.serve.radix_cache import RadixCache
 from repro.serve.scheduler import PREFILL, Request, Scheduler
+from repro.serve.telemetry import Telemetry
 
 
 def sample_tokens(lg: jax.Array, key, temperature: float,
@@ -176,9 +177,19 @@ class ContinuousEngine:
                  prefix_cache: bool = True, evict_policy: str = "lru",
                  prefill_chunk: int = 0, prefill_budget: int = 0,
                  kv_dtype: Optional[str] = None,
-                 kv_tile_blocks: int = 1, decode_split_k: int = 1):
+                 kv_tile_blocks: int = 1, decode_split_k: int = 1,
+                 telemetry: Optional[Telemetry] = None,
+                 clock: Optional[Callable[[], float]] = None):
         check_paged_support(cfg)
         self.cfg = cfg
+        # Observability is strictly opt-in: with telemetry=None (default)
+        # every hook site is one attribute load + None check. An attached
+        # Telemetry shares its clock with the engine and scheduler (unless
+        # ``clock`` overrides), so every lifecycle stamp — including
+        # ManualClock test time — comes from one source.
+        self.telemetry = telemetry
+        self._clock: Callable[[], float] = clock or (
+            telemetry.clock if telemetry is not None else time.monotonic)
         if cfg.opt_bf16_params:
             from repro.models.lm import maybe_cast_params
             params = maybe_cast_params(params, cfg)
@@ -234,7 +245,7 @@ class ContinuousEngine:
         self.prefix_cache = (RadixCache(self.pool, evict_policy)
                              if prefix_cache else None)
         self.sched = Scheduler(self.pool, max_batch, max_len,
-                               cache=self.prefix_cache)
+                               cache=self.prefix_cache, clock=self._clock)
         self.nb_max = -(-max_len // block_size)
         self.metrics = self._fresh_metrics()
         self._key = jax.random.PRNGKey(seed)
@@ -320,8 +331,11 @@ class ContinuousEngine:
                temperature: float = 0.0,
                req_id: Optional[int] = None) -> Request:
         """Enqueue one request; returns its (streaming) Request handle."""
-        return self.sched.submit(np.asarray(prompt, np.int32), max_new,
-                                 temperature, req_id)
+        req = self.sched.submit(np.asarray(prompt, np.int32), max_new,
+                                temperature, req_id)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req)
+        return req
 
     def warmup(self) -> None:
         """Take the greedy serving path's compiles out of serving latency:
@@ -387,18 +401,35 @@ class ContinuousEngine:
                 break                      # trajectory exceeds max_len/pool
         while self.sched.has_work():
             self.step()
-        self.drain()
-        self.sched.finished.clear()
-        self.metrics = self._fresh_metrics()
         # the synthetic workload's allocations shouldn't show up in the
         # serving stats (notably peak_in_use → metrics.peak_blocks), and
         # its prompts shouldn't linger in the prefix cache
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every engine-side aggregate coherently — EngineMetrics,
+        PoolStats, CacheStats, scheduler counters, the finished set, and
+        any attached telemetry — so a run/reset/run sequence reports the
+        second run exactly as a fresh engine would (the run/reset/re-run
+        equality test pins this). The prefix-cache *tree* is flushed too:
+        keeping cached KV while zeroing hit counters would make the second
+        run's stats incoherent with its actual work. Refuses to run with
+        requests in flight."""
+        if self.sched.has_work():
+            raise RuntimeError("reset() with requests queued or running")
+        self.drain()
+        self.sched.finished.clear()
+        self.sched.n_preemptions = 0
+        self.sched.tokens_discarded = 0
+        self.metrics = self._fresh_metrics()
         if self.prefix_cache is not None:
             from repro.serve.radix_cache import CacheStats
             self.prefix_cache.reset()
             self.prefix_cache.stats = CacheStats()
         from repro.serve.kv_pool import PoolStats
         self.pool.stats = PoolStats(self.pool.num_blocks)
+        if self.telemetry is not None:
+            self.telemetry.reset()
 
     def step(self) -> Dict[int, List[int]]:
         """Advance the world one iteration: admit+prefill (one *chunk* per
@@ -412,11 +443,15 @@ class ContinuousEngine:
         the finishing request's generated tokens are published to the
         radix tree, which needs their values — so drained greedy tokens
         land in that step's events."""
-        t0 = time.time()
+        tel = self.telemetry
+        t0 = self._clock()
         events: Dict[int, List[int]] = {}
         self._sync_rows()
 
         admitted = self.sched.admit(self.max_admit_per_step)
+        if tel is not None:
+            for req in admitted:
+                tel.on_admit(req)
         if self.prefill_chunk:
             # admitted requests stay PREFILL; prefilling requests advance
             # one chunk each, oldest first, until the per-step prefill
@@ -429,27 +464,38 @@ class ContinuousEngine:
             for req in admitted:
                 self._do_prefill(req, events)
         self._drain_if_finishing(events)
-        self.sched.evict_finished()              # max_new == 1 requests
+        self._evict_finished(tel)                # max_new == 1 requests
 
         before_discard = self.sched.tokens_discarded
         preempted = self.sched.ensure_decode_blocks()
         self.metrics.preemptions += len(preempted)
         self.metrics.tokens_discarded += \
             self.sched.tokens_discarded - before_discard
+        if tel is not None:
+            for req in preempted:
+                tel.on_preempt(req)
         self._sync_rows()
         if any(r.state != PREFILL for r in self.sched.running):
             self._do_decode_step(events)
             self._drain_if_finishing(events)
-            self.sched.evict_finished()
+            self._evict_finished(tel)
 
         self.metrics.steps += 1
-        self.metrics.wall_s += time.time() - t0
+        dt = self._clock() - t0
+        self.metrics.wall_s += dt
         self.metrics.peak_blocks = self.pool.stats.peak_in_use
         self.metrics.shared_blocks_peak = self.pool.stats.peak_shared
         self.metrics.cow_copies = self.pool.stats.cow_copies
         if self.prefix_cache is not None:
             self.metrics.cache_evictions = self.prefix_cache.stats.evictions
+        if tel is not None:
+            tel.on_step_end(self, t0, dt)
         return events
+
+    def _evict_finished(self, tel: Optional[Telemetry]) -> None:
+        for req in self.sched.evict_finished():
+            if tel is not None:
+                tel.on_finish(req)
 
     def _sync_rows(self) -> None:
         """Vacate rows whose request left the running set (finished or
@@ -462,15 +508,20 @@ class ContinuousEngine:
     def drain(self) -> Dict[int, List[int]]:
         """Materialize every in-flight sampled-token vector into its
         request's ``tokens`` list. Returns {req_id: fresh tokens}."""
+        tel = self.telemetry
+        n = len(self._pending)
+        t = self._clock() if (tel is not None and n) else 0.0
         events: Dict[int, List[int]] = {}
         for vec, rows in self._pending:
-            arr = np.asarray(vec)
+            arr = np.asarray(vec)                # host↔device sync point
             for req, epoch, row in rows:
                 if req.epoch == epoch:           # not preempted since
                     tok = int(arr[row])
                     req.tokens.append(tok)
                     events.setdefault(req.req_id, []).append(tok)
         self._pending.clear()
+        if tel is not None and n:
+            tel.on_drain(t, self._clock() - t, n)
         return events
 
     def _drain_if_finishing(self, events: Dict[int, List[int]]) -> None:
@@ -494,7 +545,7 @@ class ContinuousEngine:
         ``metrics.wall_s`` is set to the true wall time of the drive,
         including the final drain (step() alone accumulates only host
         dispatch time, which understates async greedy work)."""
-        t0 = time.time()
+        t0 = self._clock()
         w0 = self.metrics.wall_s     # replace this run's per-step dispatch
         #                              times with its true wall time, while
         #                              staying cumulative across runs
@@ -506,7 +557,7 @@ class ContinuousEngine:
                 for rid, toks in events.items():
                     on_token(rid, toks)
         self.drain()
-        self.metrics.wall_s = w0 + (time.time() - t0)
+        self.metrics.wall_s = w0 + (self._clock() - t0)
         return self.pop_finished()
 
     def pop_finished(self) -> Dict[int, Request]:
@@ -590,6 +641,8 @@ class ContinuousEngine:
         return greedy, lg
 
     def _do_prefill(self, req: Request, events: Dict[int, List[int]]) -> None:
+        tel = self.telemetry
+        t = self._clock() if tel is not None else 0.0
         plen = req.prompt_len
         m = req.n_prefix_hit
         if m > 0:
@@ -599,7 +652,14 @@ class ContinuousEngine:
         req.n_prefilled = plen
         self.metrics.prefill_tokens += plen - m
         self.metrics.prefix_hit_tokens += m
+        if tel is not None:
+            tel.on_prefill(req, "prefill-suffix" if m > 0 else "prefill",
+                           plen - m,
+                           self._pow2_bucket(-(-plen // self.block_size)),
+                           t, self._clock() - t)
         self._join_decode(req, greedy, lg, events)
+        if tel is not None:
+            tel.maybe_numerics_probe(self, req)
 
     def _do_prefill_chunk(self, req: Request,
                           events: Dict[int, List[int]]) -> None:
@@ -608,6 +668,8 @@ class ContinuousEngine:
         chunk attends the cached prefix and every earlier chunk straight
         out of the pool). The final chunk's last-token logits seed decoding
         and the request joins the fused batch."""
+        tel = self.telemetry
+        t = self._clock() if tel is not None else 0.0
         bs = self.block_size
         C = self.prefill_chunk
         m, sl = self.sched.next_chunk(req, C)
@@ -637,8 +699,13 @@ class ContinuousEngine:
         req.n_prefilled = m + sl
         self.metrics.prefill_tokens += sl
         self.metrics.prefill_chunks += 1
+        if tel is not None:
+            tel.on_prefill(req, "prefill-chunk", sl, w, t,
+                           self._clock() - t)
         if req.n_prefilled == req.prompt_len:
             self._join_decode(req, greedy, lg, events)
+            if tel is not None:
+                tel.maybe_numerics_probe(self, req)
         elif self.prefix_cache is not None:
             # publish completed chunks as they land — including a partial
             # tail block (its leaf is promoted in place by insert() once
@@ -681,9 +748,12 @@ class ContinuousEngine:
         # the pipeline ≤1 step deep); optimistic by the pipeline depth for a
         # pure-async run() — t_finish (eviction) has the same convention,
         # so latencies stay internally consistent.
-        req.t_first_token = time.time()
+        req.t_first_token = self._clock()
+        req.t_last_token = req.t_first_token
         self.metrics.prefills += 1
         self.metrics.tokens_out += 1
+        if self.telemetry is not None:
+            self.telemetry.on_first_token(req)
 
     def _pow2_bucket(self, need: int) -> int:
         """Decode/suffix table width via the stack-wide bucketing policy
@@ -696,6 +766,8 @@ class ContinuousEngine:
             max(self.pool.n_blocks_of(r.req_id) for _, r in occ))
 
     def _do_decode_step(self, events: Dict[int, List[int]]) -> None:
+        tel = self.telemetry
+        t = self._clock() if tel is not None else 0.0
         B = self.max_batch
         occ = [(i, r) for i, r in enumerate(self._rows) if r is not None]
         greedy_only = all(r.temperature <= 0 for _, r in occ)
@@ -745,6 +817,13 @@ class ContinuousEngine:
             self._vec = jnp.asarray(toks)
         self.metrics.decode_steps += 1
         self.metrics.tokens_out += len(occ)
+        if tel is not None:
+            now = self._clock()
+            tel.on_decode_step(rows=len(occ), table_width=w, t_start=t,
+                               dur=now - t, split_k=self.decode_split_k,
+                               kv_tile_blocks=self.kv_tile_blocks)
+            for _, req in occ:
+                tel.on_decode_token(req, now)
 
     def _sample_rows(self, lg: jax.Array, temps: List[float],
                      greedy_dev: Optional[jax.Array] = None) -> np.ndarray:

@@ -196,6 +196,126 @@ def paged_prefill(
     return lg, ks, vs
 
 
+def _audit_attention(q, k, v, intmax):
+    """Dense causal softermax in closed form: same exp2 / running-IntMax
+    recurrence as the serving kernels (order-free, so the closed form is
+    exact), returning the per-row IntMax and raw scores for the numerics
+    monitors alongside the output."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    causal = jnp.tril(jnp.ones((Sq, Sq), bool))
+    s = jnp.where(causal[None, None, None], s, NEG_INF)
+    m = jnp.max(jnp.ceil(s) if intmax else s, axis=-1, keepdims=True)
+    p = jnp.exp2(s - m)
+    d = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", (p / d).astype(v.dtype), v)
+    return (o.reshape(B, Hq, Sq, D).astype(q.dtype), m[..., 0],
+            s, causal[None, None, None])
+
+
+def paged_prefill_audit(
+    params,
+    tokens: jax.Array,       # (B, Sp) probe prompt (no padding expected)
+    last_pos: jax.Array,     # (B,) int32 index of the true last token
+    cfg: ModelConfig,
+):
+    """Lockstep full-precision vs int8-fake-quant prefill of one prompt —
+    the online numerics monitor behind ``Telemetry.numerics_probe``.
+
+    One scan carries *both* residual streams: the reference branch attends
+    the exact projected K/V, the quantized branch round-trips each layer's
+    K/V through the pool's int8 grid first (``_fake_quant_kv`` — bit-
+    identical to what a later reader dequantizes from the pool), and both
+    use the same dense Softermax closed form, so the returned logit delta
+    isolates exactly the int8 storage error PR 4's offline bench bounds at
+    ≤ 0.1. Along the way the quantized branch's scores and K/V feed the
+    hardware-margin monitors:
+
+    * ``score_intmax_max`` / ``intmax_overflow_rows`` — the running-IntMax
+      values every Softermax row tracks vs the paper's Q(6,2) LocalMax
+      format: an overflow row is one whose IntMax a real accumulator
+      would saturate.
+    * ``score_inp_clip_vals`` — causally-valid score entries outside the
+      Q(6,2) Inp format (pre-normalization saturation).
+    * ``kv_amax_max`` / ``kv_scale_sat_rows`` — per-(head, token) K/V amax
+      vs a per-layer 99.999%-percentile static scale: rows a statically
+      calibrated int8 pool (as opposed to our per-row scales) would clip.
+
+    Returns ``(lg_ref, lg_q, stats)`` with logits (B, V-padded) and stats
+    a dict of scalar jax arrays (summed/maxed over layers).
+    """
+    from repro.core.quant import (DEFAULT_BITWIDTHS, percentile_scale,
+                                  qformat_clip_count)
+
+    B, Sp = tokens.shape
+    params = maybe_cast_params(params, cfg)
+    dh = cfg.head_dim_
+    premult, intmax = attn_mod._mode(cfg)
+    qscale = premult * dh ** -0.5
+    positions = jnp.broadcast_to(jnp.arange(Sp, dtype=jnp.int32), (B, Sp))
+    x0 = embed(params["embed"], tokens, cfg)
+    fmt_max = DEFAULT_BITWIDTHS.localmax
+    fmt_inp = DEFAULT_BITWIDTHS.inp
+
+    def ffn(bp, x):
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.activation)
+        return x + f
+
+    def body(carry, bp):
+        x_ref, x_q = carry
+        # reference branch: exact K/V
+        h = rmsnorm(bp["ln1"], x_ref, cfg.norm_eps)
+        q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+        o, _, _, _ = _audit_attention(q * jnp.asarray(qscale, q.dtype),
+                                      k, v, intmax)
+        x_ref = ffn(bp, x_ref + attn_mod._out_proj(bp["mixer"], o, cfg))
+        # quantized branch: K/V through the pool's int8 grid
+        h = rmsnorm(bp["ln1"], x_q, cfg.norm_eps)
+        q, k, v = attn_mod._project_qkv(bp["mixer"], h, cfg, positions)
+        amax_k = jnp.max(jnp.abs(k), axis=-1)         # (B, Hkv, Sp)
+        amax_v = jnp.max(jnp.abs(v), axis=-1)
+        kv_amax = jnp.maximum(jnp.max(amax_k), jnp.max(amax_v))
+        sat = (jnp.sum(amax_k > 127.0 * percentile_scale(k)) +
+               jnp.sum(amax_v > 127.0 * percentile_scale(v)))
+        kq = _fake_quant_kv(k)
+        vq = _fake_quant_kv(v)
+        o, m, s, valid = _audit_attention(
+            q * jnp.asarray(qscale, q.dtype), kq, vq, intmax)
+        x_q = ffn(bp, x_q + attn_mod._out_proj(bp["mixer"], o, cfg))
+        stats = (jnp.max(m),
+                 jnp.sum(m > fmt_max.max_value),
+                 qformat_clip_count(s, fmt_inp,
+                                    where=jnp.broadcast_to(valid, s.shape)),
+                 kv_amax, sat)
+        return (x_ref, x_q), stats
+
+    (x_ref, x_q), (mx, ovf, clip, amax, sat) = jax.lax.scan(
+        body, (x0, x0), params["blocks"])
+
+    def head(x):
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x_last = jnp.take_along_axis(
+            x, last_pos[:, None, None].astype(jnp.int32), axis=1)
+        return logits(params["embed"], x_last, cfg)[:, 0]
+
+    stats = {
+        "score_intmax_max": jnp.max(mx),
+        "intmax_overflow_rows": jnp.sum(ovf),
+        "score_inp_clip_vals": jnp.sum(clip),
+        "kv_amax_max": jnp.max(amax),
+        "kv_scale_sat_rows": jnp.sum(sat),
+    }
+    return head(x_ref), head(x_q), stats
+
+
 def scatter_prefill(
     k_pool: jax.Array,       # (L, N, Hkv, BS, Dh)
     v_pool: jax.Array,
