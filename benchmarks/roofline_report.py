@@ -81,10 +81,19 @@ def markdown_table(mesh="16x16"):
 
 
 def main():
-    for mesh in ("16x16", "2x16x16"):
-        if os.path.isdir(os.path.join(ART, mesh)):
-            for line in render(mesh):
-                print(line)
+    meshes = [m for m in ("16x16", "2x16x16")
+              if os.path.isdir(os.path.join(ART, m))]
+    if not meshes:
+        return
+    # self-describing CSV: the roofline rows come from committed dry-run
+    # artifacts, not a fresh measurement — the header says which checkout
+    # rendered them so CI uploads can be diffed by commit
+    from benchmarks.provenance import provenance
+    print("# provenance:",
+          json.dumps(provenance(mode="dryrun-artifacts"), sort_keys=True))
+    for mesh in meshes:
+        for line in render(mesh):
+            print(line)
 
 
 if __name__ == "__main__":

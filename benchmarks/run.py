@@ -64,6 +64,10 @@ def main() -> None:
     from benchmarks import decode_paged_bench
     decode_paged_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Autotune — per-step grid planning vs best static schedule")
+    from benchmarks import autotune_bench
+    autotune_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import time
 from collections import deque
 from typing import List
@@ -158,7 +159,9 @@ def main(argv=None) -> float:
                          "drive comparison (and its extra warmup)")
     args = ap.parse_args(argv)
     if args.fast:
-        args.repeats = 4      # warmup dominates runtime; keep the workload
+        args.repeats = 6      # warmup dominates runtime; keep the workload
+                              # (6 rounds: the overhead gate is best-of —
+                              # more paired windows for the host-noise tail)
 
     import jax
     from repro.models.registry import get_config, model_fns, reduce_config
@@ -211,15 +214,23 @@ def main(argv=None) -> float:
             # alternate on/off order within the pair: whichever runs
             # second systematically sees a slightly colder window (turbo
             # decay, cache pressure), so a fixed order would bias the
-            # overhead ratio
+            # overhead ratio. GC is held off across the pair (and only
+            # the pair): a collection pause landing inside one window
+            # would read as hook overhead — allocator cost that BOTH
+            # configurations pay stays in the measurement either way.
             order = [(p_rounds, None)]
             if tel is not None:
                 order.insert(r % 2, (t_rounds, tel))
-            for sink, t_arg in order:
-                t, e, mm = paged_drive(telemetry=t_arg)
-                sink.append(t / e)
-                if t_arg is None:
-                    m = mm
+            gc.collect()
+            gc.disable()
+            try:
+                for sink, t_arg in order:
+                    t, e, mm = paged_drive(telemetry=t_arg)
+                    sink.append(t / e)
+                    if t_arg is None:
+                        m = mm
+            finally:
+                gc.enable()
         if static_drive and paged_drive:
             ratios.append(p_rounds[-1] / s_rounds[-1])
     tok_s_static = float(np.median(s_rounds)) if s_rounds else 0.0
@@ -244,6 +255,9 @@ def main(argv=None) -> float:
         # drives of the same engine; best-of across rounds keeps a host-
         # scheduler hiccup in one window from reading as hook overhead
         overhead_ratio = max(t / p for t, p in zip(t_rounds, p_rounds))
+        print("serve_throughput,telemetry_rounds_tok_s," +
+              ",".join(f"{t:.0f}/{p:.0f}"
+                       for t, p in zip(t_rounds, p_rounds)))
         print(f"serve_throughput,telemetry_on_over_off,"
               f"{overhead_ratio:.3f}")
         assert overhead_ratio >= 0.95, (

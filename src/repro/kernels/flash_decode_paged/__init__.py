@@ -3,6 +3,7 @@ from repro.kernels.flash_decode_paged.flash_decode_paged import (
 from repro.kernels.flash_decode_paged.ops import flash_decode_paged_op
 from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
                                                   gather_kv_dequant,
+                                                  decode_gather_oracle,
                                                   paged_decode_ref,
                                                   paged_decode_split_ref,
                                                   split_layout)
@@ -10,4 +11,4 @@ from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
 __all__ = ["flash_decode_paged", "flash_decode_paged_single",
            "flash_decode_paged_op", "paged_decode_ref",
            "paged_decode_split_ref", "split_layout", "gather_kv",
-           "gather_scales", "gather_kv_dequant"]
+           "gather_scales", "gather_kv_dequant", "decode_gather_oracle"]

@@ -21,7 +21,8 @@ import jax
 
 from repro.kernels.flash_decode_paged.flash_decode_paged import (
     flash_decode_paged, flash_decode_paged_single)
-from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_scales,
+from repro.kernels.flash_decode_paged.ref import (decode_gather_oracle,
+                                                  gather_kv, gather_scales,
                                                   gather_kv_dequant,
                                                   paged_decode_ref,
                                                   paged_decode_split_ref)
@@ -51,4 +52,5 @@ def flash_decode_paged_op(q, k_pool, v_pool, block_tables, lengths, *,
 
 __all__ = ["flash_decode_paged_op", "paged_decode_ref",
            "paged_decode_split_ref", "flash_decode_paged_single",
-           "gather_kv", "gather_scales", "gather_kv_dequant"]
+           "gather_kv", "gather_scales", "gather_kv_dequant",
+           "decode_gather_oracle"]

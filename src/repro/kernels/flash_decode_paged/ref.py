@@ -76,6 +76,50 @@ def gather_kv_dequant(pool: jax.Array, scales, block_tables: jax.Array,
             ).astype(dtype)
 
 
+def decode_gather_oracle(
+    k_pool: jax.Array,        # (N, Hkv, BS, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, W) int32
+    lengths,                  # (B,) kv lengths the kernel attends
+    *,
+    kv_tile_blocks: int = 1,
+    split_k: int = 1,
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
+):
+    """MEASURE (not model) one decode launch's gather traffic: pad the
+    table exactly as the kernel wrapper does (``split_layout``), run the
+    ref layer's actual gathers on it, and count bytes off the gathered
+    array shapes. The analytic model in ``serve/kernel_costs.py`` must
+    reproduce these numbers exactly — that agreement is the cross-check
+    against the grouped-gather contract pinned in this module's docstring.
+
+    Returns ``{"gather_bytes", "useful_bytes", "waste_bytes",
+    "grid_steps", "padded_width"}``; waste counts table entries at or past
+    each row's real block cover ``ceil(len/BS)`` (pow2 bucketing, tile
+    padding, dead tail blocks alike), including int8 scale siblings.
+    """
+    B, W = block_tables.shape
+    _, Hkv, BS, _ = k_pool.shape
+    T, S, spl, Wp = split_layout(W, kv_tile_blocks, split_k)
+    bt = jnp.pad(block_tables.astype(jnp.int32), ((0, 0), (0, Wp - W)))
+
+    gk = gather_kv(k_pool, bt)                    # the real takes — bytes
+    gv = gather_kv(v_pool, bt)                    # come off their shapes
+    gather = int(gk.nbytes) + int(gv.nbytes)
+    per_block = gk.dtype.itemsize * BS * k_pool.shape[-1] * 2
+    if k_scale is not None:
+        gks = gather_scales(k_scale, bt)
+        gvs = gather_scales(v_scale, bt)
+        gather += int(gks.nbytes) + int(gvs.nbytes)
+        per_block += gks.dtype.itemsize * BS * 2
+    useful_blocks = sum(min(-(-int(ln) // BS), Wp) for ln in list(lengths))
+    useful = useful_blocks * Hkv * per_block
+    return {"gather_bytes": gather, "useful_bytes": useful,
+            "waste_bytes": gather - useful, "grid_steps": B * Hkv * S * spl,
+            "padded_width": Wp}
+
+
 def paged_decode_ref(
     q: jax.Array,             # (B, Hq, D) pre-scaled
     k_pool: jax.Array,        # (N, Hkv, BS, D)

@@ -2,7 +2,9 @@ from repro.kernels.flash_prefill_paged.flash_prefill_paged import (
     flash_prefill_paged)
 from repro.kernels.flash_prefill_paged.ops import flash_prefill_paged_op
 from repro.kernels.flash_prefill_paged.ref import (paged_prefill_ref,
-                                                   paged_prefill_split_ref)
+                                                   paged_prefill_split_ref,
+                                                   prefill_gather_oracle)
 
 __all__ = ["flash_prefill_paged", "flash_prefill_paged_op",
-           "paged_prefill_ref", "paged_prefill_split_ref"]
+           "paged_prefill_ref", "paged_prefill_split_ref",
+           "prefill_gather_oracle"]

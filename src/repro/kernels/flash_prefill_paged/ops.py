@@ -26,7 +26,8 @@ import jax
 from repro.kernels.flash_prefill_paged.flash_prefill_paged import (
     flash_prefill_paged)
 from repro.kernels.flash_prefill_paged.ref import (paged_prefill_ref,
-                                                   paged_prefill_split_ref)
+                                                   paged_prefill_split_ref,
+                                                   prefill_gather_oracle)
 
 
 def flash_prefill_paged_op(q, k_pool, v_pool, block_tables, q_pos0, *,
@@ -59,4 +60,5 @@ def flash_prefill_paged_op(q, k_pool, v_pool, block_tables, q_pos0, *,
 
 
 __all__ = ["flash_prefill_paged_op", "flash_prefill_paged",
-           "paged_prefill_ref", "paged_prefill_split_ref"]
+           "paged_prefill_ref", "paged_prefill_split_ref",
+           "prefill_gather_oracle"]

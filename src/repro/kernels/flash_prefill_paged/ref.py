@@ -23,7 +23,55 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.numerics import NEG_INF
-from repro.kernels.flash_decode_paged.ref import gather_kv_dequant
+from repro.kernels.flash_decode_paged.ref import (gather_kv, gather_kv_dequant,
+                                                  gather_scales, split_layout)
+
+
+def prefill_gather_oracle(
+    k_pool: jax.Array,        # (N, Hkv, BS, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, W) int32
+    q_pos0,                   # (B,) absolute position of each row's q[0]
+    q_len: int,               # Sq as passed to the kernel (incl. padding)
+    *,
+    kv_tile_blocks: int = 1,
+    block_q: int = 128,
+    cover_blocks=None,        # (B,) REAL table entries per row; default
+    #                           assumes the table is the exact cover of
+    #                           pos0 + q_len positions
+    k_scale: jax.Array = None,   # (N, Hkv, BS) f32 when the pools are int8
+    v_scale: jax.Array = None,
+):
+    """MEASURE one prefill launch's gather traffic: pad the table as the
+    kernel wrapper does, run the ref layer's actual gathers for ONE kv
+    walk, and multiply by the number of query tiles ``nq`` — the kernel's
+    grid ``(B*Hkv, nq, nk)`` re-streams the whole walk once per query
+    tile. Counterpart of ``flash_decode_paged.ref.decode_gather_oracle``;
+    ``serve/kernel_costs.prefill_launch_cost`` must match it exactly."""
+    B, W = block_tables.shape
+    _, Hkv, BS, _ = k_pool.shape
+    T, _, nk, Wp = split_layout(W, kv_tile_blocks, 1)
+    BQ = min(block_q, q_len)
+    nq = -(-q_len // BQ)
+    bt = jnp.pad(block_tables.astype(jnp.int32), ((0, 0), (0, Wp - W)))
+
+    gk = gather_kv(k_pool, bt)
+    gv = gather_kv(v_pool, bt)
+    walk = int(gk.nbytes) + int(gv.nbytes)
+    per_block = gk.dtype.itemsize * BS * k_pool.shape[-1] * 2
+    if k_scale is not None:
+        gks = gather_scales(k_scale, bt)
+        gvs = gather_scales(v_scale, bt)
+        walk += int(gks.nbytes) + int(gvs.nbytes)
+        per_block += gks.dtype.itemsize * BS * 2
+    if cover_blocks is None:
+        cover_blocks = [-(-(int(p) + q_len) // BS) for p in list(q_pos0)]
+    useful_blocks = sum(min(int(c), Wp) for c in list(cover_blocks))
+    gather = walk * nq
+    useful = useful_blocks * Hkv * per_block * nq
+    return {"gather_bytes": gather, "useful_bytes": useful,
+            "waste_bytes": gather - useful,
+            "grid_steps": B * Hkv * nq * nk, "padded_width": Wp}
 
 
 def paged_prefill_ref(

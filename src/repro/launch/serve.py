@@ -79,6 +79,18 @@ def main() -> None:
                          "rescales are exact power-of-two shifts, the "
                          "partition sums reassociate within fp rounding — "
                          "a greedy flip needs an exact logit tie)")
+    ap.add_argument("--autotune", choices=("off", "static", "per-step"),
+                    default="off",
+                    help="paged engine: grid autotuning from the analytic "
+                         "kernel cost model (serve/kernel_costs.py). "
+                         "'static' picks one (kv_tile_blocks, split_k) at "
+                         "startup by modeled cost on the worst-case batch; "
+                         "'per-step' re-plans every decode step from the "
+                         "batch's lengths vector over the warmed-up "
+                         "candidate grids (never compiles mid-serve). "
+                         "--kv-tile-blocks/--decode-split-k bound the "
+                         "candidate set; decisions are exported as "
+                         "autotune_* metrics when --telemetry is on")
     ap.add_argument("--kv-dtype", choices=("auto", "bf16", "int8"),
                     default="auto",
                     help="paged engine KV pool storage: 'auto' follows "
@@ -142,6 +154,7 @@ def main() -> None:
                 kv_dtype=None if args.kv_dtype == "auto" else args.kv_dtype,
                 kv_tile_blocks=args.kv_tile_blocks,
                 decode_split_k=args.decode_split_k,
+                autotune=args.autotune,
                 telemetry=tel)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
@@ -184,11 +197,31 @@ def main() -> None:
                     log.info("numerics: max |full - int8| logit delta "
                              "%.4f over %d probes", err.value,
                              tel.c_probes.value)
+                kd = tel.registry.get("kernel_dma_bytes_total")
+                if kd is not None and kd.value > 0:
+                    kw = tel.registry.get("kernel_waste_bytes_total")
+                    kf = tel.registry.get("kernel_flops_total")
+                    log.info("kernel cost: %.2f MiB gather DMA "
+                             "(%.0f%% clamped waste), %.2f MFLOP",
+                             kd.value / 2 ** 20,
+                             100.0 * kw.value / kd.value,
+                             kf.value / 1e6)
+                if eng.planner is not None:
+                    log.info("autotune[%s]: grid=(tile=%d, split=%d), "
+                             "decisions %s", args.autotune,
+                             eng.kv_tile_blocks, eng.decode_split_k,
+                             eng.planner.summary() or "(static)")
                 if args.metrics_out:
                     tel.save_metrics(args.metrics_out,
                                      extra={"arch": cfg.name,
                                             "engine": "paged"})
                     log.info("metrics -> %s", args.metrics_out)
+                else:
+                    # no sink requested: the run's metrics still surface —
+                    # final Prometheus exposition straight to stdout
+                    print("# final metric registry (Prometheus text "
+                          "exposition; pass --metrics-out to write a file)")
+                    print(tel.registry.prometheus_text(), end="")
                 if args.trace_out:
                     tel.save_chrome_trace(args.trace_out,
                                           meta={"arch": cfg.name})

@@ -1,5 +1,10 @@
+from repro.serve.autotune import (AUTOTUNE_MODES, GridDecision, GridPlanner,
+                                  default_candidates)
 from repro.serve.engine import (ContinuousEngine, EngineMetrics,
                                 GenerateResult, ServeEngine)
+from repro.serve.kernel_costs import (CostParams, LaunchCost,
+                                      decode_launch_cost, estimate_seconds,
+                                      prefill_launch_cost)
 from repro.serve.kv_pool import PagedKVCache, PoolExhausted, PoolStats
 from repro.serve.metrics import (Counter, Gauge, Histogram, MetricRegistry,
                                  parse_prometheus_text)
@@ -13,4 +18,8 @@ __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
            "RadixCache", "CacheStats", "Request", "Scheduler",
            "Counter", "Gauge", "Histogram", "MetricRegistry",
            "parse_prometheus_text", "ManualClock", "RequestTrace",
-           "StepTimeline", "Telemetry"]
+           "StepTimeline", "Telemetry",
+           "AUTOTUNE_MODES", "GridDecision", "GridPlanner",
+           "default_candidates", "CostParams", "LaunchCost",
+           "decode_launch_cost", "prefill_launch_cost",
+           "estimate_seconds"]

@@ -57,6 +57,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.softermax import softmax_base2
 from repro.models.registry import model_fns
+from repro.serve.autotune import (AUTOTUNE_MODES, GridPlanner,
+                                  default_candidates)
+from repro.serve.kernel_costs import decode_launch_cost, prefill_launch_cost
 from repro.serve.kv_pool import PagedKVCache
 from repro.serve.paged_step import (check_paged_support, paged_decode_step,
                                     paged_prefill, paged_prefill_chunked,
@@ -178,6 +181,8 @@ class ContinuousEngine:
                  prefill_chunk: int = 0, prefill_budget: int = 0,
                  kv_dtype: Optional[str] = None,
                  kv_tile_blocks: int = 1, decode_split_k: int = 1,
+                 autotune: str = "off",
+                 autotune_candidates=None,
                  telemetry: Optional[Telemetry] = None,
                  clock: Optional[Callable[[], float]] = None):
         check_paged_support(cfg)
@@ -235,6 +240,10 @@ class ContinuousEngine:
                 f"{kv_tile_blocks}/{decode_split_k}")
         self.kv_tile_blocks = kv_tile_blocks
         self.decode_split_k = decode_split_k
+        if autotune not in AUTOTUNE_MODES:
+            raise ValueError(f"autotune must be one of {AUTOTUNE_MODES}, "
+                             f"got {autotune!r}")
+        self.autotune = autotune
         # KV pool storage: None/"auto" follow cfg.opt_int8_kv (the
         # --optimized serving path falls back to the compute dtype when the
         # flag is off); "bf16"/"int8" force that storage. Resolution lives
@@ -247,6 +256,34 @@ class ContinuousEngine:
         self.sched = Scheduler(self.pool, max_batch, max_len,
                                cache=self.prefix_cache, clock=self._clock)
         self.nb_max = -(-max_len // block_size)
+        # Kernel grid autotuning (serve/autotune.py): "static" consults
+        # the analytic cost model once, here, on the worst-case batch
+        # (every row at max_len) and rebinds the grid knobs; "per-step"
+        # keeps a live planner that re-ranks the warmed candidate grids
+        # from each decode step's actual lengths vector. Either way the
+        # candidate set is closed at construction — serving never
+        # compiles a grid warmup didn't see.
+        self.planner: Optional[GridPlanner] = None
+        if autotune != "off":
+            self.planner = GridPlanner(
+                autotune_candidates
+                or default_candidates(kv_tile_blocks, decode_split_k),
+                n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, block_size=block_size,
+                kv_dtype=self.pool.kv_dtype,
+                registry=telemetry.registry if telemetry else None)
+            if autotune == "static":
+                dec = self.planner.plan_decode(
+                    np.full((max_batch,), max_len, np.int64),
+                    table_width_bucket(self.nb_max, nb_max=self.nb_max))
+                self.kv_tile_blocks = dec.kv_tile_blocks
+                self.decode_split_k = dec.split_k
+        # Telemetry-path decode LaunchCost memo. Exact: the kernel attends
+        # lengths+1, and every cost term depends on a row only through
+        # q = len // block_size (ceil((len+1)/BS) = q+1 and
+        # ceil((len+1)/(T*BS)) = q//T + 1), so keying on the q-vector is
+        # lossless and hits on every step that crosses no block boundary.
+        self._cost_cache: Dict[tuple, object] = {}
         self.metrics = self._fresh_metrics()
         self._key = jax.random.PRNGKey(seed)
         # Decode batch rows are STABLE: a request keeps its row from
@@ -279,10 +316,14 @@ class ContinuousEngine:
                                        kv_quantize=self.quantized)
             return _amax(lg), lg, ks, vs
 
-        def _decode_fn(p, t, bt, ln, *pools):
+        # grid knobs are trace-time constants: static kwargs of the jit,
+        # so the per-step planner can swap grids without retracing tricks
+        # — each (tile, split, table-width) lands in its own cache entry,
+        # all of which warmup() pre-compiles when autotuning is on
+        def _decode_fn(p, t, bt, ln, *pools, tile=1, split=1):
             out = paged_decode_step(p, t, pools[0], pools[1], bt, ln, cfg,
-                                    kv_tile_blocks=self.kv_tile_blocks,
-                                    decode_split_k=self.decode_split_k,
+                                    kv_tile_blocks=tile,
+                                    decode_split_k=split,
                                     **_sc(pools))
             return (_amax(out[0]), out[0]) + tuple(out[1:])
 
@@ -323,7 +364,8 @@ class ContinuousEngine:
         self._scatter = jax.jit(_scatter_fn, donate_argnums=_donate(3))
         self._scatter_off = jax.jit(_scatter_off_fn,
                                     donate_argnums=_donate(4))
-        self._decode = jax.jit(_decode_fn, donate_argnums=_donate(4))
+        self._decode = jax.jit(_decode_fn, donate_argnums=_donate(4),
+                               static_argnames=("tile", "split"))
 
     # -- public API -------------------------------------------------------
 
@@ -384,13 +426,21 @@ class ContinuousEngine:
                 self._set_pools(self._scatter(ks, vs,
                                               zeros((nb,), jnp.int32),
                                               *self._pools()))
+        # per-step autotuning picks among these exact entries at serve
+        # time, so the whole candidate × width grid compiles here — the
+        # planner never triggers a mid-serve compile
+        grids = (self.planner.candidates
+                 if self.planner is not None and self.autotune == "per-step"
+                 else ((self.kv_tile_blocks, self.decode_split_k),))
         for w in sorted({table_width_bucket(n, nb_max=self.nb_max)
                          for n in range(1, self.nb_max + 1)}):
-            _, _, *pools = self._decode(
-                self.params, zeros((self.max_batch,), jnp.int32),
-                zeros((self.max_batch, w), jnp.int32),
-                zeros((self.max_batch,), jnp.int32), *self._pools())
-            self._set_pools(pools)
+            for (ti, sp) in grids:
+                _, _, *pools = self._decode(
+                    self.params, zeros((self.max_batch,), jnp.int32),
+                    zeros((self.max_batch, w), jnp.int32),
+                    zeros((self.max_batch,), jnp.int32), *self._pools(),
+                    tile=ti, split=sp)
+                self._set_pools(pools)
 
         bs = self.block_size
         for nb in range(1, self.nb_max + 1):
@@ -700,8 +750,17 @@ class ContinuousEngine:
         self.metrics.prefill_tokens += sl
         self.metrics.prefill_chunks += 1
         if tel is not None:
+            # modeled cost of the chunk's paged-prefill kernel launch
+            # (per layer); pos0 = m, one row, real table cover = cover
+            cost = prefill_launch_cost(
+                C, [m], [cover], w, n_q_heads=self.cfg.n_heads,
+                n_kv_heads=self.cfg.n_kv_heads,
+                head_dim=self.cfg.head_dim, block_size=self.block_size,
+                kv_tile_blocks=self.kv_tile_blocks,
+                kv_dtype=self.pool.kv_dtype)
             tel.on_prefill(req, "prefill-chunk", sl, w, t,
-                           self._clock() - t)
+                           self._clock() - t, cost=cost,
+                           launches=self.cfg.n_layers)
         if req.n_prefilled == req.prompt_len:
             self._join_decode(req, greedy, lg, events)
             if tel is not None:
@@ -790,9 +849,16 @@ class ContinuousEngine:
         bt[[i for i, _ in occ]] = self.pool.table_array(
             [r.req_id for _, r in occ], w)
 
+        # the kernel attends lengths+1 on every row (zombies included,
+        # masked) — plan and account against what it actually does
+        tile, split = self.kv_tile_blocks, self.decode_split_k
+        plan = None
+        if self.planner is not None and self.autotune == "per-step":
+            plan = self.planner.plan_decode(lengths + 1, w)
+            tile, split = plan.kv_tile_blocks, plan.split_k
         greedy, lg, *pools = self._decode(
             self.params, tokens1, jnp.asarray(bt), jnp.asarray(lengths),
-            *self._pools())
+            *self._pools(), tile=tile, split=split)
         self._set_pools(pools)
 
         if greedy_only:
@@ -819,11 +885,30 @@ class ContinuousEngine:
         self.metrics.tokens_out += len(occ)
         if tel is not None:
             now = self._clock()
+            if plan is not None:
+                cost = plan.cost
+            else:
+                key = (w, tile, split,
+                       (lengths // self.block_size).tobytes())
+                cost = self._cost_cache.get(key)
+                if cost is None:
+                    if len(self._cost_cache) >= 4096:
+                        self._cost_cache.clear()
+                    cost = decode_launch_cost(
+                        lengths + 1, w, n_q_heads=self.cfg.n_heads,
+                        n_kv_heads=self.cfg.n_kv_heads,
+                        head_dim=self.cfg.head_dim,
+                        block_size=self.block_size,
+                        kv_tile_blocks=tile, split_k=split,
+                        kv_dtype=self.pool.kv_dtype)
+                    self._cost_cache[key] = cost
             tel.on_decode_step(rows=len(occ), table_width=w, t_start=t,
-                               dur=now - t, split_k=self.decode_split_k,
-                               kv_tile_blocks=self.kv_tile_blocks)
-            for _, req in occ:
-                tel.on_decode_token(req, now)
+                               dur=now - t, split_k=split,
+                               kv_tile_blocks=tile, cost=cost,
+                               launches=self.cfg.n_layers)
+            if plan is not None:
+                self.planner.observe_measured(plan, now - t)
+            tel.on_decode_tokens([r for _, r in occ], now)
 
     def _sample_rows(self, lg: jax.Array, temps: List[float],
                      greedy_dev: Optional[jax.Array] = None) -> np.ndarray:

@@ -28,6 +28,7 @@ every name the serving stack exports lives in ``serve/README.md``
 """
 from __future__ import annotations
 
+import bisect
 import json
 import math
 import re
@@ -58,6 +59,11 @@ class Counter:
             raise ValueError(f"{self.name}: counters only go up (inc {n})")
         self.value += n
 
+    def merge(self, other: "Counter") -> None:
+        """Fold another replica's counter in (sum — counters are
+        extensive)."""
+        self.value += other.value
+
 
 class Gauge:
     """Set-to-current-value metric (pool occupancy, live error bounds)."""
@@ -77,6 +83,13 @@ class Gauge:
         """Running-maximum update (peak trackers, live error bounds)."""
         self.value = max(self.value, float(v))
 
+    def merge(self, other: "Gauge") -> None:
+        """Fold another replica's gauge in. Gauges are point-in-time
+        values with no universally correct cross-replica reduction; max is
+        the conservative choice for everything this stack exports (peaks,
+        occupancy high-water, error bounds)."""
+        self.value = max(self.value, other.value)
+
 
 class Histogram:
     """Streaming histogram over fixed geometric buckets.
@@ -90,7 +103,7 @@ class Histogram:
     """
 
     __slots__ = ("name", "help", "lo", "growth", "counts", "count", "sum",
-                 "min", "max", "_log_lo", "_log_growth")
+                 "min", "max", "_edges")
     kind = "histogram"
 
     def __init__(self, name: str, help: str = "", lo: float = 1e-6,
@@ -107,14 +120,15 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
-        self._log_lo = math.log(lo)
-        self._log_growth = math.log(growth)
+        # precomputed upper edges of the ladder buckets: observe() is on
+        # the serving hot path (several per decode step), and a C-level
+        # bisect over these beats float log math — and lands samples on
+        # the EXACT same boundaries upper_edge()/quantile() report
+        self._edges = [lo * growth ** i for i in range(n_buckets)]
 
     def _bucket_index(self, x: float) -> int:
-        if x <= self.lo:
-            return 0
-        i = int(math.ceil((math.log(x) - self._log_lo) / self._log_growth))
-        return min(i, len(self.counts) - 1)
+        # first bucket whose upper edge covers x; len(_edges) == overflow
+        return bisect.bisect_left(self._edges, x)
 
     def upper_edge(self, i: int) -> float:
         """Upper bound of bucket ``i`` (inf for the overflow bucket)."""
@@ -155,6 +169,26 @@ class Histogram:
                 return min(max(est, self.min), self.max)
             seen += c
         return self.max
+
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram with the IDENTICAL bucket ladder into
+        this one — the per-replica aggregation primitive. Exact: geometric
+        ladders are closed under elementwise count addition, so quantiles
+        of the merge are as accurate as if every sample had been observed
+        here (min/max stay exact too). Mismatched ladders raise — resample
+        semantics across different ladders would be silently lossy."""
+        if (other.lo, other.growth, len(other.counts)) != \
+                (self.lo, self.growth, len(self.counts)):
+            raise ValueError(
+                f"{self.name}: cannot merge mismatched bucket ladders "
+                f"(lo/growth/n {self.lo}/{self.growth}/{len(self.counts)} "
+                f"vs {other.lo}/{other.growth}/{len(other.counts)})")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
 
     @property
     def mean(self) -> float:
@@ -200,6 +234,28 @@ class MetricRegistry:
         """Drop every registered metric (coherent-reset semantics: a
         fresh registry, not zeroed husks — callers re-create lazily)."""
         self._metrics.clear()
+
+    def collect(self, *registries: "MetricRegistry",
+                prefix: str = "") -> "MetricRegistry":
+        """Aggregate same-named metrics from per-replica registries into
+        this one (groundwork for the multi-replica front-end): counters
+        and histograms merge additively, gauges take the max, and
+        ``prefix`` restricts which metric names are collected (e.g.
+        ``prefix="serve_"``). Metrics absent here are created with the
+        source's ladder/help; kind mismatches raise. Returns self so
+        ``MetricRegistry().collect(*replicas)`` reads naturally."""
+        for reg in registries:
+            for m in reg:
+                if prefix and not m.name.startswith(prefix):
+                    continue
+                if isinstance(m, Histogram):
+                    mine = self._get(Histogram, m.name, m.help, lo=m.lo,
+                                     growth=m.growth,
+                                     n_buckets=len(m.counts) - 1)
+                else:
+                    mine = self._get(type(m), m.name, m.help)
+                mine.merge(m)
+        return self
 
     # -- export -----------------------------------------------------------
 

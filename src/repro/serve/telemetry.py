@@ -197,6 +197,9 @@ class Telemetry:
 
     def _build(self) -> None:
         reg = self.registry
+        # publish_engine's (Gauge, attrgetter) bindings point into the
+        # registry — a reset swaps the metric objects out, so rebind lazily
+        self._gauge_bindings = None
         self.timeline = StepTimeline(self.clock(),
                                      self._max_timeline_events) \
             if self._timeline_on else None
@@ -229,6 +232,31 @@ class Telemetry:
             "numerics_kv_scale_sat_rows_total",
             "K/V rows whose amax would saturate a static "
             "percentile-calibrated int8 scale across probed prefills")
+        # kernel cost observatory: analytic per-launch accounting
+        # (serve/kernel_costs.py) published live. Counters aggregate
+        # all layers of every launch; histograms sample PER-LAUNCH
+        # (= per-layer) values on byte/FLOP-shaped ladders (the default
+        # ladder is latency-shaped and would overflow immediately).
+        self.c_kernel_dma = c(
+            "kernel_dma_bytes_total",
+            "modeled gather-DMA bytes moved by the paged kernels "
+            "(KV + int8 scale siblings, incl. clamped block-0 waste)")
+        self.c_kernel_flops = c(
+            "kernel_flops_total",
+            "modeled MXU matmul FLOPs executed by the paged kernels")
+        self.c_kernel_waste = c(
+            "kernel_waste_bytes_total",
+            "subset of kernel_dma_bytes_total gathered for table entries "
+            "at/past each row's real block cover (pow2 bucketing, tile "
+            "padding, dead tail blocks) — pure masked-out DMA")
+        self.h_launch_dma = h("kernel_launch_dma_bytes",
+                              "gather-DMA bytes of one kernel launch "
+                              "(one layer)", lo=1024.0, growth=1.6,
+                              n_buckets=64)
+        self.h_launch_flops = h("kernel_launch_flops",
+                                "MXU FLOPs of one kernel launch "
+                                "(one layer)", lo=4096.0, growth=1.6,
+                                n_buckets=64)
 
     # -- lifecycle hooks (engine calls these; all host-side, O(1)) --------
 
@@ -263,18 +291,22 @@ class Telemetry:
                    req.t_admit)
 
     def on_prefill(self, req, kind: str, n_tokens: int, table_width: int,
-                   t_start: float, dur: float) -> None:
+                   t_start: float, dur: float, cost=None,
+                   launches: int = 1) -> None:
         """kind: "prefill" (one-shot cold), "prefill-suffix" (cache hit),
-        or "prefill-chunk"."""
+        or "prefill-chunk". ``cost`` is the per-launch ``LaunchCost`` when
+        the phase ran a paged kernel (chunked prefill); ``launches`` is
+        kernel launches in the phase (= model layers)."""
         tr = self._trace(req)
         if tr is not None:
             tr.events.append((kind, t_start))
             if kind == "prefill-chunk":
                 tr.prefill_chunks += 1
+        extra = self.on_kernel_launch(kind, cost, launches)
         if self.timeline is not None:
             self.timeline.complete(kind, t_start, dur,
                                    req=req.req_id, tokens=n_tokens,
-                                   table_width=table_width)
+                                   table_width=table_width, **extra)
 
     def on_first_token(self, req) -> None:
         # observe TTFT once per request: a preempted request's re-delivered
@@ -292,22 +324,57 @@ class Telemetry:
         self._mark(req, "first_token", req.t_first_token)
 
     def on_decode_token(self, req, now: float) -> None:
-        if req.t_last_token > 0:
-            self.h_tpot.observe(now - req.t_last_token)
-        req.t_last_token = now
-        tr = self._trace(req)
-        if tr is not None:
-            tr.n_tokens = req.n_generated
-            tr.events.append(("token", now))
+        self.on_decode_tokens((req,), now)
+
+    def on_decode_tokens(self, reqs, now: float) -> None:
+        """Per-token accounting for one decode step, batched: the engine
+        calls this once per step with every occupied row's request (the
+        hottest hook — once per generated token) so the histogram/trace
+        lookups are hoisted out of the per-request loop. Trace event
+        lists record lifecycle milestones only — the per-token signal is
+        the tpot histogram sample, not an event tuple per token (which
+        would dominate hook cost AND allocator churn at serving rates)."""
+        observe = self.h_tpot.observe
+        traces = self.traces if self.trace_requests else None
+        for req in reqs:
+            if req.t_last_token > 0:
+                observe(now - req.t_last_token)
+            req.t_last_token = now
+            if traces is not None:
+                tr = traces.get(req.req_id)
+                if tr is not None:
+                    tr.n_tokens = req.n_generated
 
     def on_decode_step(self, *, rows: int, table_width: int,
                        t_start: float, dur: float, split_k: int,
-                       kv_tile_blocks: int) -> None:
+                       kv_tile_blocks: int, cost=None,
+                       launches: int = 1) -> None:
+        extra = self.on_kernel_launch("decode", cost, launches)
         if self.timeline is not None:
             self.timeline.complete("decode", t_start, dur, rows=rows,
                                    table_width=table_width,
                                    split_k=split_k,
-                                   kv_tile_blocks=kv_tile_blocks)
+                                   kv_tile_blocks=kv_tile_blocks, **extra)
+
+    def on_kernel_launch(self, phase: str, cost, launches: int = 1) -> Dict:
+        """Account one engine phase's paged-kernel launches from its
+        analytic ``LaunchCost`` (``serve/kernel_costs.py``): counters get
+        the phase total (cost × launches), per-launch histograms get one
+        per-layer sample. Returns the trace args to stamp on the phase's
+        timeline slice — Perfetto then shows bytes/FLOPs per phase.
+        ``cost=None`` (phase didn't run a paged kernel) is a no-op."""
+        if cost is None:
+            return {}
+        dma = cost.gather_bytes * launches
+        flops = cost.flops * launches
+        waste = cost.waste_bytes * launches
+        self.c_kernel_dma.inc(dma)
+        self.c_kernel_flops.inc(flops)
+        self.c_kernel_waste.inc(waste)
+        self.h_launch_dma.observe(cost.gather_bytes)
+        self.h_launch_flops.observe(cost.flops)
+        return {"dma_bytes": dma, "flops": flops, "waste_bytes": waste,
+                "grid_steps": cost.grid_steps * launches}
 
     def on_drain(self, t_start: float, dur: float, n_vectors: int) -> None:
         """Host↔device sync: materializing the async token pipeline."""
@@ -338,53 +405,73 @@ class Telemetry:
         self.h_step.observe(dur)
         if self.timeline is not None:
             self.timeline.complete("step", t_start, dur)
-        self.publish_engine(engine)
+        # the gauges mirror cumulative engine structs, so scrape freshness
+        # is bounded by the publish cadence, not correctness: refresh on a
+        # short cadence plus whenever the engine goes quiescent (the final
+        # step of a run always publishes — post-run snapshots are exact)
+        if engine.metrics.steps % 4 == 0 or not engine.sched.running:
+            self.publish_engine(engine)
 
     # -- registry publication ---------------------------------------------
+
+    # (exported gauge name, attribute on the mirrored struct) — resolved
+    # to bound (Gauge, attrgetter) pairs once per Telemetry instance:
+    # publish_engine runs every engine step, and per-step registry name
+    # lookups plus rebuilding these tables dominated the hook budget
+    _ENGINE_GAUGES = (
+        ("serve_steps", "steps"),
+        ("serve_decode_steps", "decode_steps"),
+        ("serve_prefills", "prefills"),
+        ("serve_prefill_chunks", "prefill_chunks"),
+        ("serve_preemptions", "preemptions"),
+        ("serve_tokens_out", "tokens_out"),
+        ("serve_tokens_discarded", "tokens_discarded"),
+        ("serve_prefill_tokens", "prefill_tokens"),
+        ("serve_prefix_hit_tokens", "prefix_hit_tokens"),
+        ("serve_prefill_savings", "prefill_savings"),
+        ("serve_wall_seconds", "wall_s"),
+        ("serve_kv_pool_bytes", "kv_pool_bytes"),
+        ("serve_pool_token_capacity", "pool_token_capacity"))
+    _POOL_GAUGES = (
+        ("pool_blocks_in_use", "blocks_in_use"),
+        ("pool_blocks_peak", "peak_in_use"),
+        ("pool_utilization", "utilization"),
+        ("pool_allocs", "allocs"),
+        ("pool_frees", "frees"),
+        ("pool_shared_blocks", "shared_blocks"),
+        ("pool_shared_blocks_peak", "peak_shared"),
+        ("pool_cow_copies", "cow_copies"))
+    _CACHE_GAUGES = (
+        ("cache_lookup_tokens", "lookup_tokens"),
+        ("cache_hit_tokens", "hit_tokens"),
+        ("cache_hit_rate", "hit_rate"),
+        ("cache_hits", "hits"),
+        ("cache_misses", "misses"),
+        ("cache_inserts", "inserts"),
+        ("cache_evictions", "evictions"))
 
     def publish_engine(self, engine) -> None:
         """Mirror ``EngineMetrics`` / ``PoolStats`` / ``CacheStats`` into
         the registry (cumulative-since-reset values exported as gauges —
         the authoritative counters live on the engine structs)."""
-        g = self.registry.gauge
+        bound = self._gauge_bindings
+        if bound is None:
+            import operator
+            g = self.registry.gauge
+            bound = self._gauge_bindings = tuple(
+                tuple((g(n), operator.attrgetter(a)) for n, a in grp)
+                for grp in (self._ENGINE_GAUGES, self._POOL_GAUGES,
+                            self._CACHE_GAUGES))
         m = engine.metrics
-        for name, val in (
-                ("serve_steps", m.steps),
-                ("serve_decode_steps", m.decode_steps),
-                ("serve_prefills", m.prefills),
-                ("serve_prefill_chunks", m.prefill_chunks),
-                ("serve_preemptions", m.preemptions),
-                ("serve_tokens_out", m.tokens_out),
-                ("serve_tokens_discarded", m.tokens_discarded),
-                ("serve_prefill_tokens", m.prefill_tokens),
-                ("serve_prefix_hit_tokens", m.prefix_hit_tokens),
-                ("serve_prefill_savings", m.prefill_savings),
-                ("serve_wall_seconds", m.wall_s),
-                ("serve_kv_pool_bytes", m.kv_pool_bytes),
-                ("serve_pool_token_capacity", m.pool_token_capacity)):
-            g(name).set(val)
+        for gg, get in bound[0]:
+            gg.value = float(get(m))
         p = engine.pool.stats
-        for name, val in (
-                ("pool_blocks_in_use", p.blocks_in_use),
-                ("pool_blocks_peak", p.peak_in_use),
-                ("pool_utilization", p.utilization),
-                ("pool_allocs", p.allocs),
-                ("pool_frees", p.frees),
-                ("pool_shared_blocks", p.shared_blocks),
-                ("pool_shared_blocks_peak", p.peak_shared),
-                ("pool_cow_copies", p.cow_copies)):
-            g(name).set(val)
+        for gg, get in bound[1]:
+            gg.value = float(get(p))
         if engine.prefix_cache is not None:
             s = engine.prefix_cache.stats
-            for name, val in (
-                    ("cache_lookup_tokens", s.lookup_tokens),
-                    ("cache_hit_tokens", s.hit_tokens),
-                    ("cache_hit_rate", s.hit_rate),
-                    ("cache_hits", s.hits),
-                    ("cache_misses", s.misses),
-                    ("cache_inserts", s.inserts),
-                    ("cache_evictions", s.evictions)):
-                g(name).set(val)
+            for gg, get in bound[2]:
+                gg.value = float(get(s))
 
     # -- numerics monitor --------------------------------------------------
 

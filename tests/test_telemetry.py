@@ -75,6 +75,41 @@ class TestHistogram:
         assert h.upper_edge(2) == pytest.approx(4e-3)
         assert math.isinf(h.upper_edge(len(h.counts) - 1))
 
+    def test_merge_is_as_if_observed_here(self):
+        # quantiles of the merge == quantiles of one histogram that saw
+        # every sample — and both track numpy within one bucket width
+        rng = np.random.default_rng(1)
+        a_s = rng.lognormal(-4.0, 1.0, 3000)
+        b_s = rng.lognormal(-2.0, 0.5, 2000)
+        a, b, one = Histogram("h"), Histogram("h"), Histogram("h")
+        for x in a_s:
+            a.observe(x)
+            one.observe(x)
+        for x in b_s:
+            b.observe(x)
+            one.observe(x)
+        a.merge(b)
+        both = np.concatenate([a_s, b_s])
+        assert a.count == one.count == len(both)
+        assert a.sum == pytest.approx(one.sum)
+        assert a.min == one.min and a.max == one.max
+        for q in (0.5, 0.9, 0.99):
+            assert a.quantile(q) == one.quantile(q)
+            exact = float(np.quantile(both, q))
+            assert abs(a.quantile(q) - exact) / exact < a.growth - 1.0
+        # merging an empty histogram is the identity
+        before = list(a.counts)
+        a.merge(Histogram("h"))
+        assert list(a.counts) == before
+
+    def test_merge_rejects_mismatched_ladder(self):
+        a = Histogram("h", lo=1e-6, growth=1.25)
+        for bad in (Histogram("h", lo=1e-3, growth=1.25),
+                    Histogram("h", lo=1e-6, growth=2.0),
+                    Histogram("h", lo=1e-6, growth=1.25, n_buckets=8)):
+            with pytest.raises(ValueError, match="ladder"):
+                a.merge(bad)
+
 
 class TestRegistry:
     def test_counter_monotonic_and_gauge_max(self):
@@ -144,6 +179,30 @@ class TestRegistry:
         lines = [jsonlib.loads(s) for s in p.read_text().splitlines()]
         assert [r["run"] for r in lines] == [1, 2]
         assert [r["metrics"]["n_total"] for r in lines] == [1.0, 2.0]
+
+    def test_collect_aggregates_replicas(self):
+        # per-replica registries folded into a front-end aggregate:
+        # counters/histograms sum, gauges max, prefix filters
+        reps = []
+        for i in range(3):
+            r = MetricRegistry()
+            r.counter("serve_req_total").inc(i + 1)
+            r.gauge("serve_pool_peak").set(10.0 * (i + 1))
+            h = r.histogram("serve_tpot_seconds")
+            for x in np.random.default_rng(i).lognormal(-4, 1, 500):
+                h.observe(x)
+            r.counter("other_total").inc(100)
+            reps.append(r)
+        agg = MetricRegistry().collect(*reps, prefix="serve_")
+        assert agg.get("serve_req_total").value == 6
+        assert agg.get("serve_pool_peak").value == 30.0
+        assert agg.get("serve_tpot_seconds").count == 1500
+        assert agg.get("other_total") is None
+        # kind mismatch across replicas raises instead of silently mixing
+        bad = MetricRegistry()
+        bad.gauge("serve_req_total")
+        with pytest.raises(ValueError):
+            agg.collect(bad)
 
 
 class TestTelemetryEngine:
