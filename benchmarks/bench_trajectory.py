@@ -54,7 +54,8 @@ def _mode_kernels() -> str:
 def _entries():
     from benchmarks import (autotune_bench, decode_paged_bench,
                             kv_int8_bench, prefill_paged_bench,
-                            prefix_cache_bench, serve_throughput)
+                            prefix_cache_bench, resilience_bench,
+                            serve_throughput)
     return {
         "decode_paged": {
             "run": lambda: decode_paged_bench.main(["--smoke"]),
@@ -88,6 +89,12 @@ def _entries():
             "kind": "deterministic",
             "full": ("BENCH_autotune.json",
                      "ratio_best_static_over_per_step")},
+        "resilience": {
+            "run": lambda: resilience_bench.main(["--smoke"]),
+            "metric": "tok_s_ratio_guarded_over_fault_free",
+            "mode": lambda: _mode_backend("measured"), "kind": "timing",
+            "full": ("BENCH_resilience.json",
+                     "tok_s_ratio_guarded_over_fault_free")},
     }
 
 
@@ -98,7 +105,13 @@ def _run_entry(name, ent):
 
 def record(args) -> int:
     from benchmarks.provenance import provenance
+    # --only re-records a subset IN PLACE: untouched entries survive with
+    # their original values (a full rewrite would silently drop every
+    # baseline the restricted run skipped)
     entries = {}
+    if args.only and os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            entries = json.load(f).get("entries", {})
     for name, ent in _entries().items():
         if args.only and name not in args.only:
             continue

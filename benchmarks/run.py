@@ -68,6 +68,10 @@ def main() -> None:
     from benchmarks import autotune_bench
     autotune_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Resilience — guarded engine under the canned fault plan")
+    from benchmarks import resilience_bench
+    resilience_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

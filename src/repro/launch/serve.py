@@ -118,6 +118,30 @@ def main() -> None:
                          "publishing the live logit-error gauge plus "
                          "IntMax-overflow / scale-saturation counters "
                          "(0 = off)")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH|canned",
+                    help="paged engine: attach the fault injector "
+                         "(serve/faults.py) with this plan — a FaultPlan "
+                         "JSON file, or the literal 'canned' for the "
+                         "reference chaos plan. Attached after warmup so "
+                         "the plan's step indices address serving steps")
+    ap.add_argument("--fault-log", default=None, metavar="PATH",
+                    help="write the fault-injection replay artifact "
+                         "(plan + every injection that fired) here")
+    ap.add_argument("--guard", action="store_true",
+                    help="paged engine: enable the graceful-degradation "
+                         "ladder (serve/guard.py) — sheds admissions, "
+                         "shrinks prefill budgets, and quarantines "
+                         "corrupted-KV requests as pool/numerics/queue "
+                         "pressure crosses thresholds; recovers "
+                         "automatically")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="paged engine: per-request end-to-end deadline; "
+                         "overdue requests are cancelled (reason "
+                         "'deadline'). 0 = no deadline")
+    ap.add_argument("--ttft-budget-ms", type=float, default=0.0,
+                    help="paged engine: per-request time-to-first-token "
+                         "budget; requests that miss it are cancelled "
+                         "(reason 'deadline'). 0 = no budget")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -143,6 +167,10 @@ def main() -> None:
             if want_tel:
                 from repro.serve import Telemetry
                 tel = Telemetry(numerics_every=args.numerics_every)
+            guard = None
+            if args.guard:
+                from repro.serve import EngineGuard
+                guard = EngineGuard()
             eng = ContinuousEngine(
                 cfg, params, block_size=args.block_size,
                 num_blocks=args.num_blocks, max_batch=args.batch,
@@ -155,13 +183,41 @@ def main() -> None:
                 kv_tile_blocks=args.kv_tile_blocks,
                 decode_split_k=args.decode_split_k,
                 autotune=args.autotune,
-                telemetry=tel)
+                telemetry=tel, guard=guard,
+                deadline_s=args.deadline_ms / 1e3 or None,
+                ttft_budget_s=args.ttft_budget_ms / 1e3 or None)
+            inj = None
+            if args.fault_plan:
+                from repro.serve import FaultInjector, FaultPlan, canned_plan
+                plan = (canned_plan() if args.fault_plan == "canned"
+                        else FaultPlan.load(args.fault_plan))
+                inj = FaultInjector(plan)
+                # after construction, before traffic: warmup() resets the
+                # injector anyway, and no synthetic warmup runs here, so
+                # plan step indices address serving steps directly
+                eng.attach_faults(inj)
+                log.info("fault injector attached: %d specs, seed %d",
+                         len(plan.specs), plan.seed)
             handles = [eng.submit(p, args.max_new,
                                   temperature=args.temperature)
                        for p in prompts]
             results = eng.run()
             dt = time.time() - t0
-            rows = [results[h.req_id].tokens for h in handles]
+            rows = [results[h.req_id].tokens for h in handles
+                    if h.req_id in results]
+            m = eng.metrics
+            if inj is not None or guard is not None or args.deadline_ms \
+                    or args.ttft_budget_ms:
+                log.info("resilience: %d faults injected, %d retries, "
+                         "%d cancelled (%d deadline, %d quarantined), "
+                         "%d shed, guard=%s",
+                         m.faults_injected, m.transient_retries,
+                         m.cancelled, m.deadline_misses, m.quarantined,
+                         m.shed,
+                         eng.guard.state if eng.guard else "off")
+            if inj is not None and args.fault_log:
+                inj.save_log(args.fault_log)
+                log.info("fault replay artifact -> %s", args.fault_log)
             log.info("kv pool[%s]: %d-token capacity in %.2f MiB "
                      "(%d blocks x %d)", eng.pool.kv_dtype,
                      eng.pool.token_capacity,

@@ -2,6 +2,13 @@ from repro.serve.autotune import (AUTOTUNE_MODES, GridDecision, GridPlanner,
                                   default_candidates)
 from repro.serve.engine import (ContinuousEngine, EngineMetrics,
                                 GenerateResult, ServeEngine)
+from repro.serve.faults import (FAULT_KINDS, FAULT_REQ, FaultInjector,
+                                FaultPlan, FaultSpec, TransientFault,
+                                canned_plan)
+from repro.serve.guard import (GUARD_STATES, EngineGuard, EngineSheddingError,
+                               GuardConfig, GuardSignals)
+from repro.serve.invariants import (InvariantViolation, check_invariants,
+                                    leaked_blocks)
 from repro.serve.kernel_costs import (CostParams, LaunchCost,
                                       decode_launch_cost, estimate_seconds,
                                       prefill_launch_cost)
@@ -9,7 +16,11 @@ from repro.serve.kv_pool import PagedKVCache, PoolExhausted, PoolStats
 from repro.serve.metrics import (Counter, Gauge, Histogram, MetricRegistry,
                                  parse_prometheus_text)
 from repro.serve.radix_cache import CacheStats, RadixCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (FINISH_CANCELLED, FINISH_DEADLINE,
+                                   FINISH_LENGTH, FINISH_QUARANTINED,
+                                   CapacityExceededError,
+                                   DuplicateRequestError, EmptyPromptError,
+                                   Request, Scheduler, SubmitError)
 from repro.serve.telemetry import (ManualClock, RequestTrace, StepTimeline,
                                    Telemetry)
 
@@ -22,4 +33,13 @@ __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
            "AUTOTUNE_MODES", "GridDecision", "GridPlanner",
            "default_candidates", "CostParams", "LaunchCost",
            "decode_launch_cost", "prefill_launch_cost",
-           "estimate_seconds"]
+           "estimate_seconds",
+           # resilience layer (PR 8)
+           "FAULT_KINDS", "FAULT_REQ", "FaultInjector", "FaultPlan",
+           "FaultSpec", "TransientFault", "canned_plan",
+           "GUARD_STATES", "EngineGuard", "EngineSheddingError",
+           "GuardConfig", "GuardSignals",
+           "InvariantViolation", "check_invariants", "leaked_blocks",
+           "SubmitError", "EmptyPromptError", "DuplicateRequestError",
+           "CapacityExceededError", "FINISH_LENGTH", "FINISH_CANCELLED",
+           "FINISH_DEADLINE", "FINISH_QUARANTINED"]

@@ -110,6 +110,10 @@ class PagedKVCache:
         self._tables: Dict[int, List[int]] = {}
         self._ref = np.zeros(num_blocks + 1, np.int32)   # [0] unused
         self._copy = None            # jitted COW kernel, built on first use
+        # nullable fault-injection hook (serve/faults.py): may raise
+        # TransientFault from append_block — BEFORE any state mutates, so
+        # the engine's bounded retry re-enters a clean pool
+        self.faults = None
         self.stats = PoolStats(num_blocks)
 
     # -- storage sizing ---------------------------------------------------
@@ -228,6 +232,8 @@ class PagedKVCache:
 
     def append_block(self, req_id: int) -> int:
         """Grow a request's table by one block (decode crossed a boundary)."""
+        if self.faults is not None:
+            self.faults.on_append_block(req_id)   # may raise TransientFault
         (b,) = self._take_fresh(1)
         self._tables[req_id].append(b)
         return b
@@ -280,6 +286,18 @@ class PagedKVCache:
         else:
             self.k, self.v = self._copy(src, dst, self.k, self.v)
         self.stats.cow_copies += 1
+
+    def corrupt_block(self, b: int) -> None:
+        """Fault injection only: silently corrupt one physical block's K/V
+        payload in place (sign-flip every row, all layers) — the model the
+        kv_corrupt fault uses for a bad DMA/scatter. Metadata (refcounts,
+        tables, scales) is untouched: the corruption is invisible to every
+        bookkeeping check and only detectable by reading the data back,
+        which is exactly what the guard's readback audit does."""
+        if b == 0:
+            raise ValueError("refusing to corrupt the garbage block")
+        self.k = self.k.at[:, b].set(-self.k[:, b])
+        self.v = self.v.at[:, b].set(-self.v[:, b])
 
     # -- views ------------------------------------------------------------
 

@@ -64,6 +64,7 @@ class CacheStats:
     misses: int = 0
     inserts: int = 0           # blocks donated to the tree
     evictions: int = 0         # blocks evicted from the tree
+    purged_blocks: int = 0     # nodes dropped by quarantine purges
     # (COW copies are counted once, at the source: PoolStats.cow_copies)
 
     @property
@@ -401,6 +402,54 @@ class RadixCache:
         self._cursor.pop(req_id, None)
         return self.pool.free(req_id)
 
+    # -- quarantine -------------------------------------------------------
+
+    def purge(self, req_id: int) -> int:
+        """Quarantine support: detach from the tree every node owning one
+        of ``req_id``'s table blocks, **and the node's whole subtree** —
+        descendants extend the poisoned prefix, so KV that was computed
+        attending the corrupted blocks must go too. Detached nodes drop
+        their tree reference (the block frees once no table holds it);
+        nodes other requests still pin are detached all the same — their
+        pins unwind normally at release (``release`` only decrements
+        ``nd.ref``, never touches tree structure), but no FUTURE admission
+        can match the poisoned path. Returns nodes purged. The caller
+        (``ContinuousEngine._quarantine``) cancels the request afterwards,
+        which releases its pins and frees its table."""
+        table = set(self.pool._tables.get(req_id, ()))
+        if not table:
+            return 0
+        purged = 0
+        # collect the topmost poisoned nodes, then drop each subtree
+        # post-order (re-check parentage: an earlier drop may have already
+        # taken a descendant's whole subtree)
+        roots = [nd for nd in self._walk() if nd.block in table]
+        for nd in roots:
+            if nd.parent is None or \
+                    nd.parent.children.get(nd.key) is not nd:
+                continue             # already detached with an ancestor
+            purged += self._drop_subtree(nd)
+        self.stats.purged_blocks += purged
+        # publish cursors may now point at detached nodes; drop every
+        # cursor whose node is no longer reachable so later inserts
+        # republish from the root instead of into a detached subtree
+        live = {id(n) for n in self._walk()}
+        live.add(id(self.root))
+        for rid, (node, _skip) in list(self._cursor.items()):
+            if id(node) not in live:
+                self._cursor.pop(rid)
+        return purged
+
+    def _drop_subtree(self, nd: RadixNode) -> int:
+        """Detach ``nd`` and every descendant, dropping each node's tree
+        reference on its block (post-order)."""
+        n = 0
+        for ch in list(nd.children.values()):
+            n += self._drop_subtree(ch)
+        del nd.parent.children[nd.key]
+        self.pool.decref(nd.block)
+        return n + 1
+
     # -- eviction ---------------------------------------------------------
 
     def _priority(self, nd: RadixNode) -> int:
@@ -452,8 +501,11 @@ class RadixCache:
         """Drop the entire tree (requires no pinned paths — i.e. no running
         requests). Used by ``ContinuousEngine.warmup`` to flush the
         synthetic workload's cache entries."""
-        if self._held:
+        if any(self._held.values()):     # empty pin lists are hygiene, not
+            #                              running work (admit() can leave
+            #                              a req's entry behind with no pins)
             raise RuntimeError("reset() with running requests still pinned")
+        self._held.clear()
         self._cursor.clear()
         dropped = 0
         for nd in self._walk():

@@ -52,6 +52,31 @@ if TYPE_CHECKING:   # import cycle: radix_cache uses kv_pool
 QUEUED, PREFILL, DECODING, FINISHED = "queued", "prefill", "decoding", \
     "finished"
 
+# terminal reasons a request can leave the engine with (Request.finish_reason)
+FINISH_LENGTH = "length"              # generated max_new tokens (normal)
+FINISH_CANCELLED = "cancelled"        # client called engine.cancel()
+FINISH_DEADLINE = "deadline"          # per-request deadline / TTFT budget
+FINISH_QUARANTINED = "quarantined"    # audited logit error over the bound
+
+
+class SubmitError(ValueError):
+    """A request was rejected at submission. Subclasses name the reason;
+    all stay ``ValueError`` for backward compatibility."""
+
+
+class EmptyPromptError(SubmitError):
+    """Prompt has zero tokens."""
+
+
+class DuplicateRequestError(SubmitError):
+    """The request id is already queued, running, or finished."""
+
+
+class CapacityExceededError(SubmitError):
+    """The trajectory cannot fit this engine: prompt + max_new exceeds
+    ``max_len``, or needs more blocks than the whole pool
+    (``token_capacity``)."""
+
 
 @dataclasses.dataclass
 class Request:
@@ -80,6 +105,12 @@ class Request:
     t_first_token: float = 0.0
     t_last_token: float = 0.0        # latest decode-token dispatch (TPOT)
     t_finish: float = 0.0
+    # lifecycle hardening (PR 8): why the request reached FINISHED, and its
+    # optional per-request latency budgets (seconds from t_submit; the
+    # engine cancels on breach and counts deadline_misses_total)
+    finish_reason: str = ""          # FINISH_* once state == FINISHED
+    deadline_s: Optional[float] = None       # whole-request deadline
+    ttft_budget_s: Optional[float] = None    # first-token deadline
 
     @property
     def prompt_len(self) -> int:
@@ -112,6 +143,9 @@ class Scheduler:
         self.pool = pool
         self.cache = cache
         self._clock = clock          # request lifecycle timestamps
+        # nullable fault-injection hook (serve/faults.py), same pattern as
+        # the engine's telemetry: None keeps admit() at one extra check
+        self.faults = None
         self.max_batch = max_batch
         self.max_len = max_len
         self.waiting: Deque[Request] = deque()
@@ -130,29 +164,45 @@ class Scheduler:
 
     def submit(self, prompt: np.ndarray, max_new: int,
                temperature: float = 0.0,
-               req_id: Optional[int] = None) -> Request:
+               req_id: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               ttft_budget_s: Optional[float] = None) -> Request:
+        """Validate + enqueue. Rejections raise typed ``SubmitError``
+        subclasses (all ``ValueError``s) at the front door instead of
+        failing late and untyped deep in admission."""
         rid = req_id if req_id is not None else self._next_id
         if isinstance(rid, int):
             self._next_id = max(self._next_id, rid + 1)  # no auto collision
         if max_new < 1:
-            raise ValueError(f"request {rid}: max_new must be >= 1")
+            raise SubmitError(f"request {rid}: max_new must be >= 1")
+        if prompt.ndim != 1:
+            raise SubmitError(
+                f"request {rid}: prompt must be 1-D, got shape "
+                f"{tuple(prompt.shape)}")
         if prompt.shape[0] < 1:
-            raise ValueError(f"request {rid}: empty prompt")
+            raise EmptyPromptError(f"request {rid}: empty prompt")
         if rid in self.finished or \
                 any(r.req_id == rid for r in self.waiting) or \
                 any(r.req_id == rid for r in self.running):
-            raise ValueError(f"request id {rid} already in use")
+            raise DuplicateRequestError(f"request id {rid} already in use")
         if prompt.shape[0] + max_new > self.max_len:
-            raise ValueError(
+            raise CapacityExceededError(
                 f"request {rid}: prompt {prompt.shape[0]} + max_new "
                 f"{max_new} exceeds engine max_len {self.max_len}")
         total = self.pool.blocks_for(prompt.shape[0] + max_new - 1)
         if total > self.pool.num_blocks:
-            raise ValueError(
-                f"request {rid}: trajectory needs {total} blocks but the "
-                f"pool only has {self.pool.num_blocks} — raise num_blocks")
+            raise CapacityExceededError(
+                f"request {rid}: trajectory needs {total} blocks "
+                f"({prompt.shape[0] + max_new - 1} cached tokens) but the "
+                f"pool holds {self.pool.num_blocks} blocks "
+                f"({self.pool.token_capacity} tokens) — raise num_blocks")
+        if deadline_s is not None and deadline_s <= 0:
+            raise SubmitError(f"request {rid}: deadline_s must be > 0")
+        if ttft_budget_s is not None and ttft_budget_s <= 0:
+            raise SubmitError(f"request {rid}: ttft_budget_s must be > 0")
         req = Request(rid, np.asarray(prompt, np.int32), max_new,
-                      temperature, t_submit=self._clock())
+                      temperature, t_submit=self._clock(),
+                      deadline_s=deadline_s, ttft_budget_s=ttft_budget_s)
         self.waiting.append(req)
         return req
 
@@ -172,6 +222,8 @@ class Scheduler:
         With a prefix cache, a request is charged only for the blocks its
         matched prefix does NOT cover, and cache-evictable blocks count as
         free (``admit`` evicts them on the spot)."""
+        if self.faults is not None and self.faults.admission_stalled():
+            return []                # injected admission stall: admit later
         admitted: List[Request] = []
         while self.waiting and len(self.running) < self.max_batch and \
                 (max_n is None or len(admitted) < max_n):
@@ -269,6 +321,11 @@ class Scheduler:
             bs = self.pool.block_size
             if req.n_cached % bs != 0:
                 continue                 # room in the last block
+            if self.pool.n_blocks_of(req.req_id) * bs > req.n_cached:
+                continue                 # table already covers the next
+                #                          token: a retried call after a
+                #                          transient fault must not grow a
+                #                          request twice (idempotence)
             while True:
                 try:
                     self.pool.append_block(req.req_id)
@@ -325,6 +382,51 @@ class Scheduler:
         self.n_preemptions += 1
         self.waiting.appendleft(req)
 
+    def force_preempt(self, n: int) -> List[Request]:
+        """Preempt the ``n`` youngest decoding requests regardless of pool
+        pressure (fault injection's preemption storm; exercises exactly the
+        organic preemption path)."""
+        out: List[Request] = []
+        for _ in range(n):
+            victims = [r for r in self.running if r.state == DECODING]
+            if not victims:
+                break
+            self._preempt(victims[-1])
+            out.append(victims[-1])
+        return out
+
+    # -- cancellation -----------------------------------------------------
+
+    def cancel(self, req_id: int,
+               reason: str = FINISH_CANCELLED) -> Optional[Request]:
+        """Terminate a queued or running request: release its blocks and
+        radix pins, drop its reservation, and move it to ``finished`` with
+        ``finish_reason=reason``. The epoch bump makes any in-flight
+        sampled-token vector for it stale (the engine's drain discards by
+        epoch), so cancellation is safe mid-prefill and mid-decode.
+        Returns the request, or None when the id is not queued/running
+        (already finished, or unknown) — cancel is idempotent."""
+        for req in self.waiting:
+            if req.req_id == req_id:
+                self.waiting.remove(req)
+                self._finish_with(req, reason)
+                return req
+        for req in self.running:
+            if req.req_id == req_id:
+                self._release(req)
+                self._reserved.pop(req.req_id, None)
+                self.running.remove(req)
+                req.epoch += 1           # stale pending vectors discarded
+                self._finish_with(req, reason)
+                return req
+        return None
+
+    def _finish_with(self, req: Request, reason: str) -> None:
+        req.state = FINISHED
+        req.finish_reason = reason
+        req.t_finish = self._clock()
+        self.finished[req.req_id] = req
+
     # -- completion -------------------------------------------------------
 
     def evict_finished(self) -> List[Request]:
@@ -334,9 +436,7 @@ class Scheduler:
             self._release(req)
             self._reserved.pop(req.req_id, None)
             self.running.remove(req)
-            req.state = FINISHED
-            req.t_finish = self._clock()
-            self.finished[req.req_id] = req
+            self._finish_with(req, FINISH_LENGTH)
         return done
 
     def _publish_generated(self, req: Request) -> None:

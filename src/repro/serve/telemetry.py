@@ -83,6 +83,9 @@ class RequestTrace:
     n_preemptions: int = 0
     n_tokens: int = 0
     prefill_chunks: int = 0
+    # how the request left the engine: "" while live, then "length" /
+    # "cancelled" / "deadline" / "quarantined" / "shed" (terminal states)
+    finish_reason: str = ""
     # (event name, timestamp) — submit/admit/prefill*/token/preempt/finish;
     # bounded by the request's own lifetime (≤ max_new token events)
     events: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
@@ -257,6 +260,30 @@ class Telemetry:
                                 "MXU FLOPs of one kernel launch "
                                 "(one layer)", lo=4096.0, growth=1.6,
                                 n_buckets=64)
+        # resilience surface (PR 8): fault injections, terminal-state
+        # counters, retry/readback accounting, and the guard ladder gauge
+        self.c_faults = c("fault_injected_total",
+                          "fault-injector firings (by the engine's "
+                          "attached FaultPlan)")
+        self.c_cancelled = c("requests_cancelled_total",
+                             "requests cancelled (client, deadline, or "
+                             "quarantine)")
+        self.c_shed = c("requests_shed_total",
+                        "submissions refused while the guard sheds load")
+        self.c_deadline = c("deadline_misses_total",
+                            "requests cancelled on deadline/TTFT breach")
+        self.c_quarantined = c("requests_quarantined_total",
+                               "requests cancelled by the scatter-readback "
+                               "KV-integrity audit")
+        self.c_retries = c("step_transient_retries_total",
+                           "TransientFaults absorbed by bounded retry")
+        self.c_readback = c("readback_audits_total",
+                            "scatter-readback KV-integrity audits run")
+        self.c_guard_transitions = c("guard_transitions_total",
+                                     "degradation-ladder state changes")
+        self.g_guard_state = reg.gauge(
+            "guard_state",
+            "degradation ladder level: 0 healthy, 1 degraded, 2 shedding")
 
     # -- lifecycle hooks (engine calls these; all host-side, O(1)) --------
 
@@ -393,13 +420,63 @@ class Telemetry:
         self.c_finished.inc()
         self.h_e2e.observe(req.t_finish - req.t_submit)
         self._mark(req, "finish", req.t_finish)
+        self._finalize_trace(req, getattr(req, "finish_reason", "length"))
+
+    def _finalize_trace(self, req, reason: str) -> None:
         tr = self.traces.pop(req.req_id, None)
         if tr is not None:
             tr.t_finish = req.t_finish
             tr.n_tokens = req.n_generated
             tr.n_preemptions = req.n_preemptions
+            tr.finish_reason = reason
             if len(self.finished_traces) < self._max_finished:
                 self.finished_traces.append(tr)
+
+    # -- resilience hooks (faults / cancellation / guard) -----------------
+
+    def on_fault(self, kind: str, step: int, **details) -> None:
+        """One injector firing (called when a fault window opens)."""
+        self.c_faults.inc()
+        if self.timeline is not None:
+            self.timeline.instant(f"fault:{kind}", self.clock(),
+                                  step=step, **details)
+
+    def on_cancel(self, req, reason: str) -> None:
+        """Terminal states that are not natural completion: client cancel,
+        deadline/TTFT breach, quarantine. The request's trace finalizes
+        with the reason; e2e samples stay completion-only so the latency
+        histograms are not polluted by cut-short requests."""
+        self.c_cancelled.inc()
+        if reason == "deadline":
+            self.c_deadline.inc()
+        elif reason == "quarantined":
+            self.c_quarantined.inc()
+        self._mark(req, f"cancel:{reason}", req.t_finish or self.clock())
+        self._finalize_trace(req, reason)
+
+    def on_shed(self) -> None:
+        self.c_shed.inc()
+
+    def on_retry(self) -> None:
+        self.c_retries.inc()
+
+    def on_readback(self, req, err: float) -> None:
+        self.c_readback.inc()
+        self.registry.gauge(
+            "readback_logit_error",
+            "latest scatter-readback audit's max logit delta").set(err)
+
+    def on_guard(self, old: str, new: str, reason: str,
+                 step: int = -1) -> None:
+        """Degradation-ladder transition (the engine calls this only when
+        the state actually changed; the steady-state gauge refresh happens
+        engine-side)."""
+        from repro.serve.guard import GUARD_STATES
+        self.c_guard_transitions.inc()
+        self.g_guard_state.set(float(GUARD_STATES.index(new)))
+        if self.timeline is not None:
+            self.timeline.instant(f"guard:{old}->{new}", self.clock(),
+                                  step=step, reason=reason)
 
     def on_step_end(self, engine, t_start: float, dur: float) -> None:
         self.h_step.observe(dur)
@@ -475,17 +552,19 @@ class Telemetry:
 
     # -- numerics monitor --------------------------------------------------
 
-    def maybe_numerics_probe(self, engine, req) -> None:
+    def maybe_numerics_probe(self, engine, req) -> Optional[Dict[str, float]]:
         """Every ``numerics_every``-th completed prefill of an int8 engine,
         re-run (a power-of-two prefix of) the request's prompt through the
-        lockstep full-precision/int8 audit and publish the live gauges."""
+        lockstep full-precision/int8 audit and publish the live gauges.
+        Returns the probe dict when a probe ran (the engine feeds its
+        ``logit_error`` into the guard's per-step signal), else None."""
         if self.numerics_every <= 0 or not engine.quantized:
-            return
+            return None
         # called right after _join_decode bumped prefills: probe the 1st,
         # (1+N)th, (1+2N)th ... completed prefill
         if (engine.metrics.prefills - 1) % self.numerics_every != 0:
-            return
-        self.numerics_probe(engine, req.prompt)
+            return None
+        return self.numerics_probe(engine, req.prompt)
 
     def numerics_probe(self, engine, prompt) -> Dict[str, float]:
         import jax

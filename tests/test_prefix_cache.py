@@ -6,8 +6,13 @@ import numpy as np
 import pytest
 
 from repro.models.registry import get_config, model_fns, reduce_config
-from repro.serve import (CacheStats, ContinuousEngine, PagedKVCache,
-                         RadixCache, Scheduler)
+from repro.serve import (FAULT_REQ, CacheStats, ContinuousEngine,
+                         FaultInjector, FaultPlan, FaultSpec, PagedKVCache,
+                         RadixCache, Scheduler, TransientFault)
+# the PR 2 invariant checker, promoted to the library (serve/invariants.py)
+# so the resilience bench can assert the identical contract mid-flight;
+# this module keeps driving it through random (now chaotic) interleavings
+from repro.serve.invariants import check_invariants, leaked_blocks
 
 _rng = np.random.default_rng(23)
 
@@ -18,42 +23,6 @@ def setup():
     fns = model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0))
     return cfg, params
-
-
-# ---------------------------------------------------------------------------
-# Shared invariant checker (the contract radix_cache.py documents)
-# ---------------------------------------------------------------------------
-
-
-def check_invariants(pool: PagedKVCache, cache: RadixCache = None):
-    N = pool.num_blocks
-    free = pool._free
-    assert len(set(free)) == len(free), "duplicate free-list entries"
-    assert 0 not in free, "garbage block 0 leaked into the free list"
-    table_blocks = [b for t in pool._tables.values() for b in t]
-    tree_nodes = cache._walk() if cache is not None else []
-    tree_blocks = [nd.block for nd in tree_nodes]
-    assert len(set(tree_blocks)) == len(tree_blocks), \
-        "two tree nodes own one physical block"
-    free_set, tree_set = set(free), set(tree_blocks)
-    for b in range(1, N + 1):
-        rc = pool.refcount(b)
-        expect = table_blocks.count(b) + (1 if b in tree_set else 0)
-        assert rc == expect, \
-            f"block {b}: refcount {rc} != tables+tree {expect}"
-        assert (b in free_set) == (rc == 0), \
-            f"block {b}: rc {rc} but free={b in free_set}"
-    assert pool.stats.blocks_in_use == N - len(free)
-    if cache is not None:
-        pins = {}
-        for nodes in cache._held.values():
-            for nd in nodes:
-                pins[id(nd)] = pins.get(id(nd), 0) + 1
-        for nd in tree_nodes:
-            assert nd.ref == pins.get(id(nd), 0), \
-                f"node {nd!r}: ref {nd.ref} != pins {pins.get(id(nd), 0)}"
-            if 0 < len(nd.key) < cache.bs:
-                assert not nd.children, "partial tail node has children"
 
 
 # ---------------------------------------------------------------------------
@@ -255,19 +224,41 @@ class TestStrictFree:
 # ---------------------------------------------------------------------------
 
 
-OPS = ("submit", "admit", "step", "preempt", "evict", "finish")
+OPS = ("submit", "admit", "step", "preempt", "evict", "finish",
+       "cancel", "inject")
 
 
 def _drive_interleaving(cfg, ops, choices):
-    """Execute one op sequence against a scheduler+cache stack, mimicking
-    the engine's calling convention (admit → publish → count-based decode),
-    checking the refcount/free-list contract after every op."""
+    """Execute one op sequence against a scheduler+cache stack with a
+    probabilistic fault injector attached, mimicking the engine's calling
+    convention (admit → publish → count-based decode) and checking the
+    refcount/free-list contract after every op. The "cancel" and "inject"
+    ops mix client cancellation, pool-pressure hostage blocks, forced
+    preemption storms, and transient block-growth faults into the
+    interleaving; the injector is seeded, so every sequence replays."""
     pool = PagedKVCache(cfg, num_blocks=12, block_size=4)
     cache = RadixCache(pool)
     sched = Scheduler(pool, max_batch=3, max_len=32, cache=cache)
+    inj = FaultInjector(FaultPlan(seed=13, specs=[
+        FaultSpec("admit_stall", prob=0.1),
+        FaultSpec("step_fault", prob=0.1),
+    ]))
+    sched.faults = pool.faults = inj
     prefixes = [np.arange(1, 5), np.arange(1, 9), np.arange(11, 23)]
+
+    def grow():
+        # the engine's bounded retry, minus the backoff (host-only test);
+        # a raise must leave the pool untouched (raise-before-mutate)
+        for _ in range(8):
+            try:
+                return sched.ensure_decode_blocks()
+            except TransientFault:
+                check_invariants(pool, cache)
+        raise AssertionError("injected step_fault never cleared")
+
     for i, op in enumerate(ops):
         c = choices[i % len(choices)]
+        inj.begin_step(i)
         if op == "submit" and len(sched.waiting) < 4:
             pre = prefixes[c % len(prefixes)]
             suf = np.asarray([50 + c, 60 + c, 70 + c][:1 + c % 3])
@@ -277,7 +268,7 @@ def _drive_interleaving(cfg, ops, choices):
             for req in sched.admit(2):
                 cache.insert(req.req_id, req.prompt)   # engine's publish
         elif op == "step" and sched.running:
-            sched.ensure_decode_blocks()
+            grow()
             for req in sched.running:
                 req.n_cached += 1
                 req.n_generated += 1
@@ -290,8 +281,26 @@ def _drive_interleaving(cfg, ops, choices):
             req = sched.running[c % len(sched.running)]
             req.n_generated = req.max_new
             sched.evict_finished()
+        elif op == "cancel":
+            live = list(sched.waiting) + sched.running
+            if live:
+                sched.cancel(live[c % len(live)].req_id)
+        elif op == "inject":
+            if c % 2 == 0:          # pool-pressure hostage toggle
+                if FAULT_REQ in pool._tables:
+                    pool.free(FAULT_REQ)
+                else:
+                    want = min(pool.num_free, 1 + c % 2)
+                    if want:
+                        pool.alloc(FAULT_REQ, want)
+            else:
+                sched.force_preempt(1 + c % 2)
         check_invariants(pool, cache)
-    # drain everything and confirm only tree blocks stay resident
+    # quiet the storm, then drain everything and confirm only tree blocks
+    # stay resident
+    sched.faults = pool.faults = None
+    if FAULT_REQ in pool._tables:
+        pool.free(FAULT_REQ)
     while sched.has_work():
         for req in sched.admit():
             cache.insert(req.req_id, req.prompt)
@@ -301,7 +310,7 @@ def _drive_interleaving(cfg, ops, choices):
             req.n_generated += 1
         sched.evict_finished()
         check_invariants(pool, cache)
-    assert pool.num_free + cache.cached_blocks == pool.num_blocks
+    assert leaked_blocks(pool, cache) == 0
     assert pool.stats.shared_blocks == 0
 
 

@@ -1,0 +1,492 @@
+"""Resilience layer: deterministic fault injection (serve/faults.py),
+request-lifecycle hardening (typed submit errors, cancellation, deadlines,
+bounded retry), and the EngineGuard degradation ladder with quarantine
+(serve/guard.py) — end to end through the continuous engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config, model_fns, reduce_config
+from repro.serve import (FAULT_KINDS, CapacityExceededError,
+                         ContinuousEngine, DuplicateRequestError,
+                         EmptyPromptError, EngineGuard, EngineSheddingError,
+                         FaultInjector, FaultPlan, FaultSpec, GuardConfig,
+                         GuardSignals, ManualClock, SubmitError, Telemetry,
+                         TransientFault, canned_plan)
+from repro.serve.guard import DEGRADED, HEALTHY, SHEDDING
+from repro.serve.invariants import check_invariants, leaked_blocks
+
+_rng = np.random.default_rng(31)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("qwen3-4b"))
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("block_size", 8)
+    kw.setdefault("num_blocks", 24)
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("retry_backoff_s", 0.0)   # tests never need real backoff
+    return ContinuousEngine(cfg, params, **kw)
+
+
+def _prompt(cfg, n):
+    return _rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fault plans and the injector (host-only, no model)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("meteor_strike", step=0)
+        with pytest.raises(ValueError, match="step index or prob"):
+            FaultSpec("slow_step")
+        with pytest.raises(ValueError, match="duration"):
+            FaultSpec("slow_step", step=0, duration=0)
+
+    def test_json_roundtrip(self, tmp_path):
+        plan = FaultPlan(seed=42, specs=[
+            FaultSpec("kv_corrupt", step=3, duration=2),
+            FaultSpec("pool_pressure", prob=0.25, duration=4,
+                      magnitude=0.5),
+        ])
+        assert FaultPlan.from_json(plan.to_json()) == plan
+        p = tmp_path / "plan.json"
+        plan.save(str(p))
+        assert FaultPlan.load(str(p)) == plan
+
+    def test_canned_plan_covers_every_kind(self):
+        assert {s.kind for s in canned_plan().specs} == set(FAULT_KINDS)
+
+
+class TestFaultInjector:
+    def _fire_steps(self, inj, n=48):
+        out = []
+        for s in range(n):
+            inj.begin_step(s)
+            out.extend(dict(e) for e in inj.log[len(out):])
+        return out
+
+    def test_probabilistic_plan_replays_bit_for_bit(self):
+        plan = FaultPlan(seed=9, specs=[
+            FaultSpec("admit_stall", prob=0.2, duration=2),
+            FaultSpec("slow_step", prob=0.15, magnitude=0.01),
+        ])
+        a = self._fire_steps(FaultInjector(plan))
+        b = self._fire_steps(FaultInjector(plan))
+        assert a and a == b             # something fired, identically
+        inj = FaultInjector(plan)
+        first = self._fire_steps(inj)
+        inj.reset()
+        assert self._fire_steps(inj) == first
+        other = self._fire_steps(FaultInjector(
+            FaultPlan(seed=10, specs=plan.specs)))
+        assert other != a               # the seed is load-bearing
+
+    def test_windows_and_consumption_hooks(self):
+        inj = FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("admit_stall", step=0),
+            FaultSpec("pool_pressure", step=1, magnitude=0.25),
+            FaultSpec("slow_step", step=2, magnitude=0.5),
+            FaultSpec("kv_corrupt", step=3, duration=2),
+            FaultSpec("numerics_spike", step=4, magnitude=0.9),
+            FaultSpec("step_fault", step=5, duration=2),
+        ]))
+        inj.begin_step(0)
+        assert inj.admission_stalled()
+        assert inj.pool_pressure_target(16) == 0
+        inj.begin_step(1)
+        assert not inj.admission_stalled()
+        assert inj.pool_pressure_target(16) == 4
+        inj.begin_step(2)
+        assert inj.stall_seconds() == 0.5
+        inj.begin_step(3)
+        assert inj.take_kv_corrupt()
+        assert not inj.take_kv_corrupt()   # one victim per window
+        inj.begin_step(4)                  # window still open, already used
+        assert not inj.take_kv_corrupt()
+        assert inj.numerics_spike() == 0.9
+        inj.begin_step(5)
+        with pytest.raises(TransientFault):
+            inj.check_step_fault()
+        with pytest.raises(TransientFault):
+            inj.check_step_fault()         # duration == raise budget
+        inj.check_step_fault()             # budget spent: clean
+        assert inj.faults_injected == len(inj.log) == 6
+
+    def test_replay_artifact(self, tmp_path):
+        import json
+        inj = FaultInjector(canned_plan())
+        for s in range(30):
+            inj.begin_step(s)
+        p = tmp_path / "replay.json"
+        inj.save_log(str(p))
+        doc = json.loads(p.read_text())
+        assert FaultPlan.from_json(json.dumps(doc["plan"])) == canned_plan()
+        assert {e["kind"] for e in doc["injections"]} == set(FAULT_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder (pure state machine)
+# ---------------------------------------------------------------------------
+
+
+class TestGuardLadder:
+    def test_escalation_is_immediate(self):
+        g = EngineGuard()
+        assert g.state == HEALTHY and g.submit_allowed()
+        ch = g.observe(GuardSignals(pool_util=0.90), step=1)
+        assert ch == (HEALTHY, DEGRADED, "pool_util 0.90")
+        ch = g.observe(GuardSignals(pool_util=0.99), step=2)
+        assert ch[1] == SHEDDING
+        assert not g.submit_allowed() and not g.admit_allowed()
+        assert g.effective_max_admit(4) == 0
+        assert g.transitions == [(1, HEALTHY, DEGRADED, "pool_util 0.90"),
+                                 (2, DEGRADED, SHEDDING, "pool_util 0.99")]
+
+    def test_healthy_to_shedding_in_one_step(self):
+        g = EngineGuard()
+        ch = g.observe(GuardSignals(pool_util=1.0))
+        assert ch[0] == HEALTHY and ch[1] == SHEDDING
+
+    def test_recovery_is_hysteretic(self):
+        g = EngineGuard(GuardConfig(recover_steps=2))
+        g.observe(GuardSignals(pool_util=1.0))
+        assert g.state == SHEDDING
+        assert g.observe(GuardSignals()) is None      # 1 clean: not yet
+        g.observe(GuardSignals(pool_util=1.0))        # dirty resets streak
+        assert g.observe(GuardSignals()) is None
+        ch = g.observe(GuardSignals())                # 2 consecutive clean
+        assert ch[1] == DEGRADED and "recovered" in ch[2]
+        g.observe(GuardSignals())
+        ch = g.observe(GuardSignals())
+        assert ch[1] == HEALTHY and g.state == HEALTHY
+
+    def test_every_signal_reaches_severity(self):
+        cfgd = GuardConfig(queue_wait_degraded=1.0, queue_wait_shedding=5.0,
+                           step_time_hung_s=0.1)
+        for sig, want in [
+                (GuardSignals(logit_error=0.3), "logit_error"),
+                (GuardSignals(queue_wait=2.0), "queue_wait"),
+                (GuardSignals(step_seconds=0.2), "step_seconds")]:
+            g = EngineGuard(cfgd)
+            old, new, reason = g.observe(sig)
+            assert new == DEGRADED and reason.startswith(want)
+        g = EngineGuard(cfgd)
+        assert g.observe(GuardSignals(queue_wait=6.0))[1] == SHEDDING
+
+    def test_policy_knobs(self):
+        g = EngineGuard()
+        assert g.effective_prefill_budget(8) == 8
+        assert not g.should_quarantine(0.49)
+        assert g.should_quarantine(0.5)
+        g.observe(GuardSignals(pool_util=0.9))
+        assert g.effective_max_admit(4) == 2
+        assert g.effective_prefill_budget(8) == 4
+        assert g.effective_prefill_budget(0) == 0    # uncapped stays uncapped
+        g.reset()
+        assert g.state == HEALTHY and g.transitions == []
+
+
+# ---------------------------------------------------------------------------
+# Submit validation (typed front-door errors)
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitValidation:
+    def test_typed_errors(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params, num_blocks=2)
+        with pytest.raises(EmptyPromptError):
+            eng.submit(np.zeros((0,), np.int32), 4)
+        with pytest.raises(SubmitError, match="1-D"):
+            eng.submit(np.ones((2, 3), np.int32), 4)
+        with pytest.raises(SubmitError, match="max_new"):
+            eng.submit(_prompt(cfg, 4), 0)
+        with pytest.raises(CapacityExceededError, match="max_len"):
+            eng.submit(_prompt(cfg, 20), 8)          # 28 > max_len 24
+        with pytest.raises(CapacityExceededError, match="num_blocks"):
+            eng.submit(_prompt(cfg, 16), 8)          # 3 blocks > pool of 2
+        with pytest.raises(SubmitError, match="deadline_s"):
+            eng.submit(_prompt(cfg, 4), 2, deadline_s=0.0)
+        h = eng.submit(_prompt(cfg, 4), 2)
+        with pytest.raises(DuplicateRequestError):
+            eng.submit(_prompt(cfg, 4), 2, req_id=h.req_id)
+        # every rejection stays a ValueError (pre-PR 8 catch sites)
+        for exc in (SubmitError, EmptyPromptError, DuplicateRequestError,
+                    CapacityExceededError):
+            assert issubclass(exc, ValueError)
+        # nothing was enqueued by the rejected submissions
+        assert len(eng.sched.waiting) == 1
+
+
+# ---------------------------------------------------------------------------
+# Cancellation and deadlines
+# ---------------------------------------------------------------------------
+
+
+class TestCancel:
+    def test_cancel_waiting_is_idempotent(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        h = eng.submit(_prompt(cfg, 8), 4)
+        assert eng.cancel(h.req_id)
+        assert not eng.cancel(h.req_id)              # already finished
+        assert not eng.cancel(12345)                 # unknown id
+        assert h.finish_reason == "cancelled"
+        assert eng.metrics.cancelled == 1
+        assert not eng.sched.has_work()
+        assert h.req_id in eng.pop_finished()
+
+    def test_cancel_running_frees_blocks_and_pins(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        ha = eng.submit(_prompt(cfg, 12), 8)
+        hb = eng.submit(_prompt(cfg, 12), 8)
+        eng.step()                                   # both admitted+decoding
+        assert ha.req_id in eng.pool._tables
+        assert eng.cancel(ha.req_id)
+        assert ha.req_id not in eng.pool._tables     # table released
+        assert not eng.prefix_cache._held.get(ha.req_id)
+        check_invariants(eng.pool, eng.prefix_cache)
+        res = eng.run()                              # b unaffected
+        assert res[hb.req_id].finish_reason == "length"
+        assert len(res[hb.req_id].tokens) == 8
+        assert leaked_blocks(eng.pool, eng.prefix_cache) == 0
+
+
+class TestDeadlines:
+    def test_deadline_cancels_and_counts(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        eng = _engine(cfg, params, clock=clock, deadline_s=10.0)
+        h_doomed = eng.submit(_prompt(cfg, 8), 8, deadline_s=0.5)
+        h_fine = eng.submit(_prompt(cfg, 8), 2)
+        clock.advance(1.0)                           # past doomed's deadline
+        res = eng.run()
+        assert res[h_doomed.req_id].finish_reason == "deadline"
+        assert res[h_fine.req_id].finish_reason == "length"
+        assert eng.metrics.deadline_misses == 1
+        assert eng.metrics.cancelled == 1            # deadline is a cancel
+        assert leaked_blocks(eng.pool, eng.prefix_cache) == 0
+
+    def test_ttft_budget_cancels_before_first_token(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        eng = _engine(cfg, params, clock=clock, ttft_budget_s=0.5)
+        h = eng.submit(_prompt(cfg, 8), 4)
+        clock.advance(1.0)                           # never admitted in time
+        eng.step()
+        assert h.finish_reason == "deadline"
+        assert eng.metrics.deadline_misses == 1
+
+    def test_ttft_budget_spares_streaming_requests(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        eng = _engine(cfg, params, clock=clock)
+        h = eng.submit(_prompt(cfg, 8), 4, ttft_budget_s=0.5)
+        eng.step()                                   # first token dispatched
+        assert h.t_first_token > 0.0
+        clock.advance(1.0)                           # TTFT already met
+        res = eng.run()
+        assert res[h.req_id].finish_reason == "length"
+        assert eng.metrics.deadline_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# Transient faults and bounded retry
+# ---------------------------------------------------------------------------
+
+
+class TestTransientRetry:
+    def test_retry_absorbs_the_fault_window(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params)                   # 3 retries default
+        eng.attach_faults(FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("step_fault", step=0, duration=2)])))
+        h = eng.submit(_prompt(cfg, 8), 4)
+        res = eng.run()
+        assert res[h.req_id].finish_reason == "length"
+        assert eng.metrics.transient_retries == 2    # both raises absorbed
+        assert eng.metrics.faults_injected >= 1
+
+    def test_retry_exhaustion_propagates(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params, step_fault_retries=1)
+        eng.attach_faults(FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("step_fault", step=0, duration=5)])))
+        h = eng.submit(_prompt(cfg, 8), 4)
+        with pytest.raises(TransientFault):
+            eng.step()
+        check_invariants(eng.pool, eng.prefix_cache)  # raise-before-mutate
+        eng.attach_faults(None)                      # operator intervention
+        res = eng.run()
+        assert res[h.req_id].finish_reason == "length"
+        assert len(res[h.req_id].tokens) == 4
+
+
+# ---------------------------------------------------------------------------
+# Guard + engine: shedding, recovery, quarantine
+# ---------------------------------------------------------------------------
+
+
+class TestGuardedEngine:
+    def test_shedding_front_door_and_recovery(self, setup):
+        cfg, params = setup
+        guard = EngineGuard(GuardConfig(pool_util_degraded=0.01,
+                                        pool_util_shedding=0.02,
+                                        recover_steps=1))
+        eng = _engine(cfg, params, guard=guard, prefix_cache=False)
+        h = eng.submit(_prompt(cfg, 8), 4)
+        eng.step()                                   # blocks allocated →
+        assert guard.state == SHEDDING               # util over both bars
+        with pytest.raises(EngineSheddingError, match="shedding"):
+            eng.submit(_prompt(cfg, 8), 4)
+        assert eng.metrics.shed == 1
+        res = eng.run()                              # admitted work drains
+        assert res[h.req_id].finish_reason == "length"
+        eng.step()                                   # idle clean steps:
+        eng.step()                                   # shed → degraded →
+        assert guard.state == HEALTHY                # healthy (recover=1)
+        eng.submit(_prompt(cfg, 8), 2)               # front door reopens
+        eng.run()
+
+    def test_kv_corruption_is_quarantined_and_purged(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params, guard=EngineGuard())
+        eng.attach_faults(FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("kv_corrupt", step=0, duration=1)])))
+        ha = eng.submit(_prompt(cfg, 12), 6)         # prefills first: victim
+        hb = eng.submit(_prompt(cfg, 12), 6)
+        res = eng.run()
+        assert res[ha.req_id].finish_reason == "quarantined"
+        assert res[hb.req_id].finish_reason == "length"
+        assert len(res[hb.req_id].tokens) == 6
+        assert eng.metrics.quarantined == 1
+        assert eng.metrics.readback_audits >= 2
+        # the victim's poisoned prompt blocks were purged from the tree:
+        # a resubmission of the same prompt gets no prefix hit
+        assert eng.prefix_cache.lookup(ha.prompt) == 0
+        assert eng.faults.corrupted_req_ids() == [ha.req_id]
+        check_invariants(eng.pool, eng.prefix_cache)
+        assert leaked_blocks(eng.pool, eng.prefix_cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# reset()/drain lifecycle hygiene (same-step finish + preempt)
+# ---------------------------------------------------------------------------
+
+
+class TestResetDrainHygiene:
+    def test_same_step_finish_and_preempt_leaves_no_pins(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        ha = eng.submit(_prompt(cfg, 8), 1)          # finishes on step 0
+        hb = eng.submit(_prompt(cfg, 8), 6)
+        eng.step()                                   # a finishes; storm b
+        eng.sched.force_preempt(1)
+        assert ha.finish_reason == "length"
+        assert hb.n_preemptions == 1
+        check_invariants(eng.pool, eng.prefix_cache)
+        res = eng.run()                              # b readmits + finishes
+        assert len(res[hb.req_id].tokens) == 6
+        assert not any(eng.prefix_cache._held.values())
+        assert leaked_blocks(eng.pool, eng.prefix_cache) == 0
+        eng.reset()                                  # tree flushed, no pins
+        assert eng.pool.num_free == eng.pool.num_blocks
+        assert eng.prefix_cache.cached_blocks == 0
+
+    def test_reset_releases_injected_pool_pressure(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        inj = FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("pool_pressure", step=0, duration=50,
+                      magnitude=0.5)]))
+        eng.attach_faults(inj)
+        h = eng.submit(_prompt(cfg, 8), 2)
+        res = eng.run()
+        assert res[h.req_id].finish_reason == "length"
+        assert eng._fault_pressure_blocks > 0        # window still open
+        eng.reset()
+        assert eng._fault_pressure_blocks == 0
+        assert eng.pool.num_free == eng.pool.num_blocks
+        assert inj.log == []                         # injector reset too
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: terminal states and resilience counters
+# ---------------------------------------------------------------------------
+
+
+class TestTerminalTelemetry:
+    def test_traces_and_counters(self, setup):
+        cfg, params = setup
+        tel = Telemetry(clock=ManualClock(tick=0.001))
+        eng = _engine(cfg, params, telemetry=tel)
+        h_cancel = eng.submit(_prompt(cfg, 8), 4)
+        h_doomed = eng.submit(_prompt(cfg, 8), 4, deadline_s=0.5)
+        h_done = eng.submit(_prompt(cfg, 8), 2)
+        eng.cancel(h_cancel.req_id)
+        tel.clock.advance(1.0)
+        eng.run()
+        reasons = {tr.req_id: tr.finish_reason for tr in tel.finished_traces}
+        assert reasons[h_cancel.req_id] == "cancelled"
+        assert reasons[h_doomed.req_id] == "deadline"
+        assert reasons[h_done.req_id] == "length"
+        reg = tel.registry
+        assert reg.get("requests_cancelled_total").value == 2
+        assert reg.get("deadline_misses_total").value == 1
+        # e2e latency stays completion-only (no cut-short samples)
+        assert reg.get("serve_e2e_seconds").count == 1
+
+    def test_fault_and_guard_metrics_exported(self, setup):
+        cfg, params = setup
+        tel = Telemetry(clock=ManualClock(tick=0.001))
+        guard = EngineGuard(GuardConfig(pool_util_degraded=0.01,
+                                        pool_util_shedding=0.02,
+                                        recover_steps=1))
+        eng = _engine(cfg, params, telemetry=tel, guard=guard)
+        eng.attach_faults(FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("slow_step", step=0, magnitude=0.25)])))
+        eng.submit(_prompt(cfg, 8), 2)
+        eng.run()
+        reg = tel.registry
+        assert reg.get("fault_injected_total").value >= 1
+        assert reg.get("guard_transitions_total").value >= 1
+        assert reg.get("guard_state") is not None
+        from repro.serve.metrics import parse_prometheus_text
+        fams = parse_prometheus_text(reg.prometheus_text())
+        for name in ("fault_injected_total", "requests_cancelled_total",
+                     "requests_shed_total", "deadline_misses_total",
+                     "guard_state"):
+            assert name in fams, name
+
+
+# ---------------------------------------------------------------------------
+# The resilience bench's CI mode (slow: three engines + verification drives)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestBenchSmoke:
+    def test_resilience_bench_smoke(self):
+        import pathlib
+        import sys
+        root = pathlib.Path(__file__).resolve().parent.parent
+        sys.path.insert(0, str(root))
+        try:
+            from benchmarks import resilience_bench
+            ratio = resilience_bench.main(["--smoke"])
+        finally:
+            sys.path.pop(0)
+        assert ratio >= 0.70
