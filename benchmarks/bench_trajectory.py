@@ -52,7 +52,7 @@ def _mode_kernels() -> str:
 # is wall-clock ("timing") or derived from counts/models ("deterministic"),
 # and the committed full record to cross-reference (file, key) if any.
 def _entries():
-    from benchmarks import (autotune_bench, decode_paged_bench,
+    from benchmarks import (autotune_bench, decode_paged_bench, fleet_bench,
                             kv_int8_bench, prefill_paged_bench,
                             prefix_cache_bench, resilience_bench,
                             serve_throughput)
@@ -95,6 +95,15 @@ def _entries():
             "mode": lambda: _mode_backend("measured"), "kind": "timing",
             "full": ("BENCH_resilience.json",
                      "tok_s_ratio_guarded_over_fault_free")},
+        "fleet": {
+            # tokens per supervision tick (the lockstep device-parallel
+            # throughput model) — tick counts are deterministic, so no
+            # timing-noise retries apply
+            "run": lambda: fleet_bench.main(["--smoke"]),
+            "metric": "scaling_ratio_fleet_over_single",
+            "mode": lambda: "tick-model", "kind": "deterministic",
+            "full": ("BENCH_fleet.json",
+                     "scaling_ratio_fleet_over_single")},
     }
 
 

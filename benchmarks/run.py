@@ -72,6 +72,10 @@ def main() -> None:
     from benchmarks import resilience_bench
     resilience_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Fleet — multi-replica scaling, affinity routing, failover")
+    from benchmarks import fleet_bench
+    fleet_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

@@ -28,6 +28,79 @@ from repro.utils.logging import get_logger
 log = get_logger("launch.serve")
 
 
+def _serve_fleet(args, cfg, params, prompts, t0):
+    """Serve the workload through a FleetSupervisor over N replicas:
+    prefix-affinity (or round-robin) placement, step-watchdog
+    supervision, journaled failover, fleet-aggregated metrics."""
+    from repro.serve import (EngineGuard, FaultInjector, FaultPlan,
+                             FleetSupervisor, Journal, Router, Telemetry,
+                             canned_fleet_plan)
+    want_tel = bool(args.telemetry or args.metrics_out)
+    engines = []
+    for _ in range(args.replicas):
+        eng = ContinuousEngine(
+            cfg, params, block_size=args.block_size,
+            num_blocks=args.num_blocks, max_batch=args.batch,
+            max_len=args.prompt_len + args.max_new,
+            prefix_cache=args.prefix_cache,
+            evict_policy=args.evict_policy,
+            prefill_chunk=args.prefill_chunk,
+            prefill_budget=args.prefill_budget,
+            kv_dtype=None if args.kv_dtype == "auto" else args.kv_dtype,
+            kv_tile_blocks=args.kv_tile_blocks,
+            decode_split_k=args.decode_split_k,
+            telemetry=Telemetry() if want_tel else None,
+            guard=EngineGuard() if args.guard else None)
+        eng.warmup()
+        engines.append(eng)
+    faults = None
+    if args.fleet_fault_plan:
+        plan = (canned_fleet_plan() if args.fleet_fault_plan == "canned"
+                else FaultPlan.load(args.fleet_fault_plan))
+        faults = FaultInjector(plan)
+        log.info("fleet fault injector attached: %d specs, seed %d",
+                 len(plan.specs), plan.seed)
+    journal = Journal(path=args.journal_out)
+    sup = FleetSupervisor(engines, router=Router(args.router),
+                          journal=journal, faults=faults,
+                          step_parallel=True)
+    treqs = [sup.submit(p, args.max_new, temperature=args.temperature,
+                        deadline_s=args.deadline_ms / 1e3 or None,
+                        ttft_budget_s=args.ttft_budget_ms / 1e3 or None)
+             for p in prompts]
+    sup.run_until_drained()
+    dt = time.time() - t0
+    tr = sup.tracker
+    log.info("fleet[%dx %s, %s router]: %d completed, %d failed, "
+             "%d failovers, %d placement retries in %d ticks",
+             args.replicas, cfg.name, args.router,
+             int(tr.c_completed.value), int(tr.c_failed.value),
+             int(tr.c_failovers.value), int(tr.c_retries.value), sup.ticks)
+    log.info("fleet health: crashed=%d hung=%d alive=%d",
+             int(sup.c_crashed.value), int(sup.c_hung.value),
+             int(sup.g_alive.value))
+    for name, h in (("ttft", tr.h_ttft), ("e2e", tr.h_e2e)):
+        if h.count:
+            log.info("fleet %s: p50 %.1fms p99 %.1fms (n=%d)", name,
+                     h.quantile(0.5) * 1e3, h.quantile(0.99) * 1e3,
+                     h.count)
+    events = journal.replay().replica_events
+    if events:
+        log.info("fleet replica events: %s",
+                 [(e["event"], e["replica"], e["tick"]) for e in events])
+    if args.metrics_out:
+        agg = sup.collect_metrics()
+        with open(args.metrics_out, "w") as f:
+            f.write(agg.prometheus_text())
+        log.info("fleet-aggregated metrics -> %s", args.metrics_out)
+    if args.journal_out:
+        log.info("write-ahead journal (%d records) -> %s",
+                 len(journal.records), args.journal_out)
+    sup.close()
+    rows = [list(t.result.tokens) for t in treqs]
+    return rows, dt
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(GRID_ARCHS), default="qwen3-4b")
@@ -142,6 +215,26 @@ def main() -> None:
                     help="paged engine: per-request time-to-first-token "
                          "budget; requests that miss it are cancelled "
                          "(reason 'deadline'). 0 = no budget")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="paged engine: serve through a FleetSupervisor "
+                         "over this many engine replicas (serve/"
+                         "supervisor.py) — prefix-affinity routing, "
+                         "step-watchdog supervision, journaled failover. "
+                         "1 = the plain single-engine path")
+    ap.add_argument("--router", choices=("affinity", "round-robin"),
+                    default="affinity",
+                    help="fleet placement policy: radix-cache prefix "
+                         "affinity (load/budget fallback) or round-robin")
+    ap.add_argument("--journal-out", default=None, metavar="PATH",
+                    help="fleet: write the write-ahead request journal "
+                         "(JSONL; serve/journal.py) — submit/placement/"
+                         "token/terminal records, replayable post-mortem")
+    ap.add_argument("--fleet-fault-plan", default=None,
+                    metavar="PATH|canned",
+                    help="fleet: attach the fleet fault injector — a "
+                         "FaultPlan JSON file, or the literal 'canned' "
+                         "for the reference replica-crash + hang plan "
+                         "(serve/faults.py canned_fleet_plan)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -159,7 +252,9 @@ def main() -> None:
         prompts = rng.integers(1, cfg.vocab_size,
                                (args.batch, args.prompt_len)).astype(np.int32)
         t0 = time.time()
-        if args.engine == "paged":
+        if args.engine == "paged" and args.replicas > 1:
+            rows, dt = _serve_fleet(args, cfg, params, prompts, t0)
+        elif args.engine == "paged":
             want_tel = args.telemetry if args.telemetry is not None else \
                 bool(args.metrics_out or args.trace_out
                      or args.numerics_every)
@@ -198,9 +293,18 @@ def main() -> None:
                 eng.attach_faults(inj)
                 log.info("fault injector attached: %d specs, seed %d",
                          len(plan.specs), plan.seed)
-            handles = [eng.submit(p, args.max_new,
-                                  temperature=args.temperature)
-                       for p in prompts]
+            from repro.serve import EngineSheddingError
+            handles = []
+            for p in prompts:
+                try:
+                    handles.append(eng.submit(p, args.max_new,
+                                              temperature=args.temperature))
+                except EngineSheddingError as e:
+                    # the guard refused the front door; its hint is the
+                    # minimum clean steps before a retry can succeed
+                    log.warning("submit shed by guard (%s): retry after "
+                                ">= %d clean engine steps", e,
+                                e.retry_after_steps)
             results = eng.run()
             dt = time.time() - t0
             rows = [results[h.req_id].tokens for h in handles

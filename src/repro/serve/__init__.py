@@ -2,13 +2,18 @@ from repro.serve.autotune import (AUTOTUNE_MODES, GridDecision, GridPlanner,
                                   default_candidates)
 from repro.serve.engine import (ContinuousEngine, EngineMetrics,
                                 GenerateResult, ServeEngine)
-from repro.serve.faults import (FAULT_KINDS, FAULT_REQ, FaultInjector,
-                                FaultPlan, FaultSpec, TransientFault,
+from repro.serve.faults import (ENGINE_FAULT_KINDS, FAULT_KINDS, FAULT_REQ,
+                                FLEET_FAULT_KINDS, FaultInjector, FaultPlan,
+                                FaultSpec, TransientFault, canned_fleet_plan,
                                 canned_plan)
+from repro.serve.frontend import (AsyncFrontend, AsyncStream, RequestResult,
+                                  RequestTracker, TrackedRequest)
 from repro.serve.guard import (GUARD_STATES, EngineGuard, EngineSheddingError,
                                GuardConfig, GuardSignals)
 from repro.serve.invariants import (InvariantViolation, check_invariants,
                                     leaked_blocks)
+from repro.serve.journal import (Journal, JournalCorrupt, ReplayedRequest,
+                                 ReplayState, replay)
 from repro.serve.kernel_costs import (CostParams, LaunchCost,
                                       decode_launch_cost, estimate_seconds,
                                       prefill_launch_cost)
@@ -16,11 +21,14 @@ from repro.serve.kv_pool import PagedKVCache, PoolExhausted, PoolStats
 from repro.serve.metrics import (Counter, Gauge, Histogram, MetricRegistry,
                                  parse_prometheus_text)
 from repro.serve.radix_cache import CacheStats, RadixCache
+from repro.serve.router import ROUTING_POLICIES, PlacementDecision, Router
 from repro.serve.scheduler import (FINISH_CANCELLED, FINISH_DEADLINE,
-                                   FINISH_LENGTH, FINISH_QUARANTINED,
+                                   FINISH_FAILOVER, FINISH_LENGTH,
+                                   FINISH_QUARANTINED,
                                    CapacityExceededError,
                                    DuplicateRequestError, EmptyPromptError,
                                    Request, Scheduler, SubmitError)
+from repro.serve.supervisor import FleetSupervisor, ReplicaHandle
 from repro.serve.telemetry import (ManualClock, RequestTrace, StepTimeline,
                                    Telemetry)
 
@@ -42,4 +50,11 @@ __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
            "InvariantViolation", "check_invariants", "leaked_blocks",
            "SubmitError", "EmptyPromptError", "DuplicateRequestError",
            "CapacityExceededError", "FINISH_LENGTH", "FINISH_CANCELLED",
-           "FINISH_DEADLINE", "FINISH_QUARANTINED"]
+           "FINISH_DEADLINE", "FINISH_QUARANTINED",
+           # fleet serving layer (PR 9)
+           "ENGINE_FAULT_KINDS", "FLEET_FAULT_KINDS", "canned_fleet_plan",
+           "FINISH_FAILOVER", "AsyncFrontend", "AsyncStream",
+           "RequestResult", "RequestTracker", "TrackedRequest",
+           "Journal", "JournalCorrupt", "ReplayState", "ReplayedRequest",
+           "replay", "ROUTING_POLICIES", "PlacementDecision", "Router",
+           "FleetSupervisor", "ReplicaHandle"]

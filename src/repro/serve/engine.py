@@ -411,27 +411,34 @@ class ContinuousEngine:
                temperature: float = 0.0,
                req_id: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               ttft_budget_s: Optional[float] = None) -> Request:
+               ttft_budget_s: Optional[float] = None,
+               t_submit: Optional[float] = None,
+               ttft_observed: bool = False) -> Request:
         """Enqueue one request; returns its (streaming) Request handle.
         ``deadline_s``/``ttft_budget_s`` override the engine defaults
         (None = engine default; the engine cancels on breach). While the
         guard is SHEDDING this raises ``EngineSheddingError`` — the
         degradation ladder's front door (counted in
-        ``requests_shed_total``)."""
+        ``requests_shed_total``) — carrying the guard's
+        ``retry_after_steps`` backoff hint. ``t_submit``/``ttft_observed``
+        are the fleet-failover migration stamps (see Scheduler.submit)."""
         if self.guard is not None and not self.guard.submit_allowed():
             self.metrics.shed += 1
             if self.telemetry is not None:
                 self.telemetry.on_shed()
+            hint = self.guard.retry_after_steps()
             raise EngineSheddingError(
                 "engine is shedding load (guard state: "
                 f"{self.guard.state}; reason: {self.guard.last_reason}) — "
-                "retry after backoff")
+                f"retry after >= {hint} clean steps",
+                retry_after_steps=hint)
         req = self.sched.submit(
             np.asarray(prompt, np.int32), max_new, temperature, req_id,
             deadline_s=(deadline_s if deadline_s is not None
                         else self.default_deadline_s),
             ttft_budget_s=(ttft_budget_s if ttft_budget_s is not None
-                           else self.default_ttft_budget_s))
+                           else self.default_ttft_budget_s),
+            t_submit=t_submit, ttft_observed=ttft_observed)
         if self.telemetry is not None:
             self.telemetry.on_submit(req)
         return req

@@ -44,6 +44,17 @@ Fault taxonomy (``FAULT_KINDS``; see serve/README.md "Failure model"):
 ``numerics_spike``  inject a logit-error reading of ``magnitude`` into the
                     guard signal for ``duration`` steps.
 
+Fleet kinds (PR 9; consumed by ``serve/supervisor.py`` per fleet tick,
+``magnitude`` names the victim replica index):
+
+``replica_crash``   the replica dies at the window's opening tick: its
+                    engine is abandoned and every in-flight request is
+                    re-placed on a survivor.
+``replica_hang``    the replica's device stops responding for ``duration``
+                    ticks: the supervisor's step-watchdog declares it hung
+                    after the heartbeat grace, fails its requests over,
+                    and readmits the replica (empty) once it resumes.
+
 All decisions happen in ``begin_step``; the per-site hooks only consume
 them. Everything is host-side; the only device work a fault can cause is
 the ``kv_corrupt`` block rewrite, performed by the engine.
@@ -60,9 +71,15 @@ import numpy as np
 # allocated under. Negative so it can never collide with a real request.
 FAULT_REQ = -1
 
-FAULT_KINDS = ("pool_pressure", "admit_stall", "slow_step", "hung_step",
-               "preempt_storm", "step_fault", "kv_corrupt",
-               "numerics_spike")
+# Engine-level kinds are consumed inside ContinuousEngine.step(); fleet
+# kinds are consumed by the FleetSupervisor's per-tick poll (the engine
+# never sees them — a whole replica crashing or hanging is not something
+# the replica itself can observe).
+ENGINE_FAULT_KINDS = ("pool_pressure", "admit_stall", "slow_step",
+                      "hung_step", "preempt_storm", "step_fault",
+                      "kv_corrupt", "numerics_spike")
+FLEET_FAULT_KINDS = ("replica_crash", "replica_hang")
+FAULT_KINDS = ENGINE_FAULT_KINDS + FLEET_FAULT_KINDS
 
 
 class TransientFault(RuntimeError):
@@ -130,8 +147,9 @@ class FaultPlan:
 
 def canned_plan(seed: int = 7) -> FaultPlan:
     """The reference fault plan the resilience benchmark and the CI chaos
-    smoke run: one of every kind, step-indexed so the guarded and the
-    unguarded runs face the *identical* storm."""
+    smoke run: one of every ENGINE kind, step-indexed so the guarded and
+    the unguarded runs face the *identical* storm (fleet kinds live in
+    ``canned_fleet_plan`` — an engine cannot injure its own replica)."""
     return FaultPlan(seed=seed, specs=[
         FaultSpec("kv_corrupt", step=2, duration=2),
         FaultSpec("admit_stall", step=5, duration=2),
@@ -142,6 +160,24 @@ def canned_plan(seed: int = 7) -> FaultPlan:
         FaultSpec("numerics_spike", step=20, duration=2, magnitude=0.75),
         FaultSpec("hung_step", step=24, duration=1, magnitude=0.02),
     ])
+
+
+def canned_fleet_plan(seed: int = 11, crash_tick: int = 10,
+                      crash_replica: int = 0,
+                      hang_tick: Optional[int] = 22, hang_ticks: int = 4,
+                      hang_replica: int = 1) -> FaultPlan:
+    """The reference FLEET fault plan (fleet bench + CI fleet chaos
+    smoke): replica ``crash_replica`` dies at tick ``crash_tick``;
+    optionally replica ``hang_replica`` goes unresponsive for
+    ``hang_ticks`` ticks starting at ``hang_tick`` (None disables the
+    hang). Tick indices are fleet supervision ticks, not engine steps."""
+    specs = [FaultSpec("replica_crash", step=crash_tick,
+                       magnitude=crash_replica)]
+    if hang_tick is not None:
+        specs.append(FaultSpec("replica_hang", step=hang_tick,
+                               duration=hang_ticks,
+                               magnitude=hang_replica))
+    return FaultPlan(seed=seed, specs=specs)
 
 
 class FaultInjector:
@@ -166,6 +202,8 @@ class FaultInjector:
         self._windows: Dict[int, int] = {}
         self._step_fault_raises = 0   # TransientFaults left to raise
         self._kv_corrupt_armed = False
+        self._crash_pending: List[int] = []   # replica idx, until consumed
+        self._hung_replicas: set = set()      # replica idx, this tick
         self.log.clear()
         self.faults_injected = 0
 
@@ -193,10 +231,13 @@ class FaultInjector:
         reported to telemetry's ``fault_injected_total`` when attached)."""
         self.step_idx = step
         self._fired: Dict[str, FaultSpec] = {}
+        self._hung_replicas = set()
         for idx, spec in enumerate(self.plan.specs):
             if not self._active(idx, spec, step):
                 continue
             self._fired[spec.kind] = spec
+            if spec.kind == "replica_hang":
+                self._hung_replicas.add(int(spec.magnitude))
             opening = (spec.step == step if spec.step is not None
                        else self._windows.get(idx) == step)
             if opening:
@@ -204,6 +245,8 @@ class FaultInjector:
                     self._step_fault_raises = spec.duration
                 if spec.kind == "kv_corrupt":
                     self._kv_corrupt_armed = True
+                if spec.kind == "replica_crash":
+                    self._crash_pending.append(int(spec.magnitude))
                 self.record(spec.kind, step=step,
                             duration=spec.duration,
                             magnitude=spec.magnitude)
@@ -269,6 +312,20 @@ class FaultInjector:
     def numerics_spike(self) -> float:
         spec = self._fired.get("numerics_spike")
         return spec.magnitude if spec is not None else 0.0
+
+    # -- consumption hooks (fleet supervisor) -----------------------------
+
+    def take_replica_crashes(self) -> List[int]:
+        """Replica indices whose crash window opened since the last call
+        (consumed once: a replica only dies one time)."""
+        out, self._crash_pending = self._crash_pending, []
+        return out
+
+    def replica_hang_targets(self) -> "set":
+        """Replica indices whose device is unresponsive this tick (the
+        supervisor's drive loop skips stepping them; detection is the
+        step-watchdog's job, not this hook's)."""
+        return set(self._hung_replicas)
 
     # -- replay artifact ---------------------------------------------------
 

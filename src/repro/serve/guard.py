@@ -43,7 +43,15 @@ GUARD_STATES = (HEALTHY, DEGRADED, SHEDDING)
 
 class EngineSheddingError(RuntimeError):
     """submit() refused: the guard is in SHEDDING state. Back off and
-    retry; the guard recovers automatically once signals clear."""
+    retry; the guard recovers automatically once signals clear.
+    ``retry_after_steps`` is the machine-readable hint (PR 9): the number
+    of clean engine steps still required before the guard can step down
+    out of SHEDDING and the front door reopens — a router/front-end should
+    wait at least that many steps before re-offering work."""
+
+    def __init__(self, msg: str, retry_after_steps: int = 1):
+        super().__init__(msg)
+        self.retry_after_steps = retry_after_steps
 
 
 @dataclasses.dataclass
@@ -163,6 +171,13 @@ class EngineGuard:
 
     def submit_allowed(self) -> bool:
         return self.state != SHEDDING
+
+    def retry_after_steps(self) -> int:
+        """Clean steps still needed before the current level can step down
+        one rung (the ``recover_steps`` hysteresis minus the clean streak
+        already banked). This is the ``EngineSheddingError`` backoff hint:
+        while SHEDDING, submissions cannot succeed sooner."""
+        return max(1, self.config.recover_steps - self._clean_streak)
 
     def effective_max_admit(self, base: int) -> int:
         if self.state == SHEDDING:

@@ -1,0 +1,183 @@
+"""Write-ahead request journal for the fleet front-end.
+
+Every externally-visible state change of a fleet request is appended to
+the journal BEFORE it takes effect (write-ahead), so a crash of the
+front-end itself — or a post-mortem of a replica failure — can
+reconstruct exactly what every client was promised and what it received.
+Record kinds (one JSON object per record; ``t`` is the fleet clock):
+
+``submit``     {rid, prompt_len, max_new, t [, prompt]} — client accepted.
+``placement``  {rid, replica, engine_rid, attempt, reason, resume_base, t}
+               — the request was offered to a replica. ``attempt`` counts
+               placements (0 = first); ``reason`` is "submit" for the
+               first, then "crash"/"hang" (failover) or "retry" (backoff
+               after a shed/full fleet); ``resume_base`` is how many
+               tokens had already streamed when the recompute prompt
+               ``[prompt ‖ tokens-so-far]`` was built.
+``token``      {rid, replica, pos, toks, t} — ``toks`` streamed to the
+               client; ``pos`` is the stream position of toks[0]
+               (contiguity is validated by replay()).
+``terminal``   {rid, reason, n_tokens, t} — the typed terminal result.
+``replica``    {replica, event: crash|hang|resume, tick, t} — fleet
+               health transitions (forensics; not part of request state).
+
+``replay()`` folds the records back into per-request terminal state and
+is the crash-consistency gate: the fleet bench asserts that the replayed
+tokens and terminal reasons equal the live tracker's, byte for byte.
+
+Host-side and allocation-light: one dict per record, optional JSONL file
+sink flushed per append (the write-ahead property is only as strong as
+the sink's durability; tests use the in-memory list).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+RECORD_KINDS = ("submit", "placement", "token", "terminal", "replica")
+
+
+class JournalCorrupt(RuntimeError):
+    """replay() found records that cannot describe any real execution
+    (unknown kind, token stream with a gap, terminal/token mismatch)."""
+
+
+@dataclasses.dataclass
+class ReplayedRequest:
+    """One request's state as reconstructed from the journal."""
+
+    rid: int
+    prompt_len: int = 0
+    max_new: int = 0
+    prompt: Optional[List[int]] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""              # "" = still in flight at the
+    #                                      journal's horizon
+    placements: List[Dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_failovers(self) -> int:
+        return sum(1 for p in self.placements
+                   if p["reason"] in ("crash", "hang"))
+
+
+@dataclasses.dataclass
+class ReplayState:
+    """The fold of a journal: request states + replica event history."""
+
+    requests: Dict[int, ReplayedRequest] = dataclasses.field(
+        default_factory=dict)
+    replica_events: List[Dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def terminal(self) -> Dict[int, ReplayedRequest]:
+        return {rid: r for rid, r in self.requests.items()
+                if r.finish_reason}
+
+
+class Journal:
+    """Append-only journal with an in-memory record list and an optional
+    JSONL file sink. ``append`` is called by the supervisor/tracker
+    BEFORE the recorded action takes effect."""
+
+    def __init__(self, path: Optional[str] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 log_prompts: bool = True):
+        self.path = path
+        self.clock = clock or time.monotonic
+        self.log_prompts = log_prompts
+        self.records: List[Dict] = []
+        self._sink = open(path, "w") if path else None
+
+    def append(self, kind: str, **fields) -> Dict:
+        if kind not in RECORD_KINDS:
+            raise ValueError(f"unknown journal record kind {kind!r}; "
+                             f"expected one of {RECORD_KINDS}")
+        rec = dict(kind=kind, t=round(self.clock(), 6), **fields)
+        self.records.append(rec)
+        if self._sink is not None:
+            self._sink.write(json.dumps(rec) + "\n")
+            self._sink.flush()
+        return rec
+
+    def close(self) -> None:
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            for rec in self.records:
+                f.write(json.dumps(rec) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Journal":
+        j = cls()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    j.records.append(json.loads(line))
+        return j
+
+    # -- replay ------------------------------------------------------------
+
+    def replay(self) -> ReplayState:
+        return replay(self.records)
+
+
+def replay(records: List[Dict]) -> ReplayState:
+    """Fold journal records into per-request terminal state, validating
+    the stream invariants a real execution must satisfy: token positions
+    contiguous from 0, no tokens before submit or after terminal, and the
+    terminal's ``n_tokens`` equal to the stream length."""
+    st = ReplayState()
+    for rec in records:
+        kind = rec.get("kind")
+        if kind == "submit":
+            rid = rec["rid"]
+            if rid in st.requests:
+                raise JournalCorrupt(f"request {rid} submitted twice")
+            st.requests[rid] = ReplayedRequest(
+                rid, prompt_len=rec["prompt_len"], max_new=rec["max_new"],
+                prompt=rec.get("prompt"))
+        elif kind == "placement":
+            req = _live(st, rec, "placement")
+            req.placements.append({k: rec[k] for k in
+                                   ("replica", "engine_rid", "attempt",
+                                    "reason", "resume_base")})
+        elif kind == "token":
+            req = _live(st, rec, "token")
+            if rec["pos"] != len(req.tokens):
+                raise JournalCorrupt(
+                    f"request {req.rid}: token record at pos {rec['pos']} "
+                    f"but stream holds {len(req.tokens)} tokens")
+            req.tokens.extend(rec["toks"])
+        elif kind == "terminal":
+            req = _live(st, rec, "terminal")
+            if rec["n_tokens"] != len(req.tokens):
+                raise JournalCorrupt(
+                    f"request {req.rid}: terminal claims "
+                    f"{rec['n_tokens']} tokens, stream holds "
+                    f"{len(req.tokens)}")
+            req.finish_reason = rec["reason"]
+        elif kind == "replica":
+            st.replica_events.append(rec)
+        else:
+            raise JournalCorrupt(f"unknown record kind {kind!r}")
+    return st
+
+
+def _live(st: ReplayState, rec: Dict, what: str) -> ReplayedRequest:
+    rid = rec.get("rid")
+    req = st.requests.get(rid)
+    if req is None:
+        raise JournalCorrupt(f"{what} record for unknown request {rid}")
+    if req.finish_reason:
+        raise JournalCorrupt(
+            f"{what} record for request {rid} after its terminal")
+    return req

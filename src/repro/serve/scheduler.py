@@ -57,6 +57,10 @@ FINISH_LENGTH = "length"              # generated max_new tokens (normal)
 FINISH_CANCELLED = "cancelled"        # client called engine.cancel()
 FINISH_DEADLINE = "deadline"          # per-request deadline / TTFT budget
 FINISH_QUARANTINED = "quarantined"    # audited logit error over the bound
+FINISH_FAILOVER = "failover"          # revoked from a hung replica after
+#                                       its requests were re-placed on a
+#                                       survivor (fleet-internal: never a
+#                                       client-visible terminal state)
 
 
 class SubmitError(ValueError):
@@ -111,6 +115,12 @@ class Request:
     finish_reason: str = ""          # FINISH_* once state == FINISHED
     deadline_s: Optional[float] = None       # whole-request deadline
     ttft_budget_s: Optional[float] = None    # first-token deadline
+    # fleet migration (PR 9): a request re-placed on a survivor replica
+    # after a crash/hang arrives with its ORIGINAL submit stamp (so
+    # deadlines and E2E keep measuring from the client's submit) and with
+    # ttft_observed=True when its first token already streamed from the
+    # dead replica (telemetry must not observe a second fleet TTFT sample)
+    ttft_observed: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -166,10 +176,16 @@ class Scheduler:
                temperature: float = 0.0,
                req_id: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               ttft_budget_s: Optional[float] = None) -> Request:
+               ttft_budget_s: Optional[float] = None,
+               t_submit: Optional[float] = None,
+               ttft_observed: bool = False) -> Request:
         """Validate + enqueue. Rejections raise typed ``SubmitError``
         subclasses (all ``ValueError``s) at the front door instead of
-        failing late and untyped deep in admission."""
+        failing late and untyped deep in admission. ``t_submit`` overrides
+        the submit stamp (fleet failover: the survivor measures deadlines
+        and E2E from the client's original submit, not the re-placement);
+        ``ttft_observed`` marks the fleet-wide first token as already
+        delivered (telemetry skips the TTFT sample)."""
         rid = req_id if req_id is not None else self._next_id
         if isinstance(rid, int):
             self._next_id = max(self._next_id, rid + 1)  # no auto collision
@@ -201,8 +217,11 @@ class Scheduler:
         if ttft_budget_s is not None and ttft_budget_s <= 0:
             raise SubmitError(f"request {rid}: ttft_budget_s must be > 0")
         req = Request(rid, np.asarray(prompt, np.int32), max_new,
-                      temperature, t_submit=self._clock(),
-                      deadline_s=deadline_s, ttft_budget_s=ttft_budget_s)
+                      temperature,
+                      t_submit=(t_submit if t_submit is not None
+                                else self._clock()),
+                      deadline_s=deadline_s, ttft_budget_s=ttft_budget_s,
+                      ttft_observed=ttft_observed)
         self.waiting.append(req)
         return req
 

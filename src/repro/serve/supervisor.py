@@ -1,0 +1,402 @@
+"""Fleet supervision: per-replica health, step-watchdog heartbeats, and
+journaled failover over N ``ContinuousEngine`` replicas.
+
+The supervisor owns the synchronous fleet drive — one ``tick()`` is one
+supervision round:
+
+    1. evaluate the fleet fault plan (``replica_crash`` / ``replica_hang``
+       via the PR 8 ``FaultInjector``; a crash kills the replica at the
+       tick boundary, a hang makes its device unresponsive);
+    2. run the step-watchdog: a serving replica that holds work but has
+       not heartbeated for ``hang_grace_ticks`` supervision ticks (or
+       ``hang_timeout_s`` wall seconds, when set) is declared hung;
+    3. retry pending placements whose backoff expired, and enforce
+       deadlines on requests the fleet has not managed to place;
+    4. step + drain every serving replica (optionally in parallel
+       threads — engines share nothing but read-only params), stamping
+       heartbeats;
+    5. pump freshly materialized tokens and terminal states into the
+       tracker/journal, in replica order (deterministic journals).
+
+**Failover recompute contract.** When a replica dies or hangs, every
+request assigned to it is re-placed on a survivor with the prompt
+``[prompt ‖ tokens-emitted-so-far]`` and ``max_new`` reduced by the
+tokens already streamed. Greedy decode is deterministic and the repo's
+engine paths are pinned exactly equal (PR 1/3/5 greedy-equality tests),
+so the survivor's continuation is byte-identical to the unfailed run —
+the same recompute mechanism the scheduler already uses for
+preemption-readmit, lifted across replicas. The migration stamps
+(``t_submit`` override + ``ttft_observed``) keep deadlines, E2E, and the
+fleet-wide single TTFT sample measured from the client's original
+submit.
+
+A hung replica differs from a crashed one only in its afterlife: its
+requests fail over identically, but when the device comes back the
+supervisor first cancels the revoked engine requests (reason
+``failover`` — freeing their blocks and radix pins, and making any
+stale pipeline vector epoch-dead) and then returns the replica, empty,
+to the routing pool. A crashed replica's engine is abandoned outright.
+
+Placement failures (whole fleet shedding/full) ride bounded exponential
+backoff: the delay starts from the ``EngineSheddingError.retry_after_steps``
+hint when one was raised and doubles per consecutive refusal, bounded by
+``max_attempts`` before the request resolves ``rejected``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.faults import FaultInjector
+from repro.serve.frontend import (DONE, PENDING, PLACED, Assignment,
+                                  RequestTracker, TrackedRequest)
+from repro.serve.guard import EngineSheddingError
+from repro.serve.invariants import check_invariants
+from repro.serve.journal import Journal
+from repro.serve.router import Router
+from repro.serve.scheduler import (FINISH_DEADLINE, FINISH_FAILOVER,
+                                   FINISH_LENGTH, CapacityExceededError)
+
+# replica lifecycle (ReplicaHandle.state)
+SERVING, HUNG, DEAD = "serving", "hung", "dead"
+
+
+@dataclasses.dataclass
+class ReplicaHandle:
+    """One replica as the supervisor sees it: the engine plus fleet-side
+    liveness. ``stalled`` mirrors the injected-hang window (the device is
+    unresponsive; the drive loop cannot step it) — *detection* is the
+    watchdog's job, which only ever looks at heartbeats."""
+
+    idx: int
+    engine: object
+    state: str = SERVING
+    stalled: bool = False
+    revoked: List[int] = dataclasses.field(default_factory=list)
+    last_beat_tick: int = -1
+    last_beat_t: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"r{self.idx}"
+
+    @property
+    def accepting(self) -> bool:
+        return self.state == SERVING
+
+    def has_work(self) -> bool:
+        return self.engine.sched.has_work()
+
+
+class FleetSupervisor:
+    """Owns the replica set, the router, the tracker, and the journal;
+    drives supervision ticks (module docstring). Engines must be warmed
+    up by the caller before serving (warmup resets engine state)."""
+
+    def __init__(self, engines: List[object],
+                 router: Optional[Router] = None,
+                 tracker: Optional[RequestTracker] = None,
+                 journal: Optional[Journal] = None,
+                 faults: Optional[FaultInjector] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 hang_grace_ticks: int = 3,
+                 hang_timeout_s: Optional[float] = None,
+                 max_attempts: int = 8,
+                 backoff_cap_ticks: int = 32,
+                 check_invariants_each_tick: bool = False,
+                 step_parallel: bool = False):
+        if not engines:
+            raise ValueError("fleet needs at least one engine replica")
+        self.replicas = [ReplicaHandle(i, e) for i, e in enumerate(engines)]
+        self.clock = clock or time.monotonic
+        self.router = router or Router()
+        self.tracker = tracker or RequestTracker(clock=self.clock)
+        self.journal = journal
+        self.faults = faults
+        self.hang_grace_ticks = hang_grace_ticks
+        self.hang_timeout_s = hang_timeout_s
+        self.max_attempts = max_attempts
+        self.backoff_cap_ticks = backoff_cap_ticks
+        self.check_invariants_each_tick = check_invariants_each_tick
+        self.step_parallel = step_parallel
+        self.ticks = 0
+        self._engine_map: Dict[int, TrackedRequest] = {}
+        self._next_engine_rid = 0
+        self._pool: Optional[ThreadPoolExecutor] = None
+        reg = self.tracker.registry
+        self.c_crashed = reg.counter(
+            "fleet_replicas_crashed_total", "replicas lost to a crash")
+        self.c_hung = reg.counter(
+            "fleet_replicas_hung_total",
+            "replicas declared hung by the step-watchdog")
+        self.g_alive = reg.gauge(
+            "fleet_replicas_alive", "replicas currently accepting work")
+        self.g_alive.set(len(self.replicas))
+
+    # -- front door --------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               temperature: float = 0.0,
+               deadline_s: Optional[float] = None,
+               ttft_budget_s: Optional[float] = None) -> TrackedRequest:
+        """Accept one request fleet-wide: journal it, track it, and try
+        to place it immediately (a refused placement parks it in the
+        pending queue with backoff — the client's stream is live either
+        way)."""
+        treq = self.tracker.create(prompt, max_new, temperature,
+                                   deadline_s=deadline_s,
+                                   ttft_budget_s=ttft_budget_s)
+        if self.journal is not None:
+            rec = dict(rid=treq.rid, prompt_len=int(treq.prompt.shape[0]),
+                       max_new=max_new)
+            if self.journal.log_prompts:
+                rec["prompt"] = [int(x) for x in treq.prompt]
+            self.journal.append("submit", **rec)
+        self._try_place(treq, reason="submit")
+        return treq
+
+    def has_work(self) -> bool:
+        return self.tracker.has_work()
+
+    @property
+    def alive(self) -> List[ReplicaHandle]:
+        return [r for r in self.replicas if r.state == SERVING]
+
+    # -- placement ---------------------------------------------------------
+
+    def _try_place(self, treq: TrackedRequest, reason: str) -> bool:
+        if treq.remaining <= 0:
+            # every token already streamed before the failover — nothing
+            # left to recompute, the request is simply complete
+            self._terminal(treq, FINISH_LENGTH)
+            return True
+        rprompt = treq.recompute_prompt()
+        replica = self.router.place(rprompt, self.replicas)
+        hint = 1
+        if replica is not None:
+            erid = self._next_engine_rid
+            self._next_engine_rid += 1
+            treq.attempts += 1
+            if self.journal is not None:
+                self.journal.append(
+                    "placement", rid=treq.rid, replica=replica.idx,
+                    engine_rid=erid, attempt=treq.attempts - 1,
+                    reason=reason, resume_base=len(treq.tokens))
+            try:
+                handle = replica.engine.submit(
+                    rprompt, treq.remaining,
+                    temperature=treq.temperature, req_id=erid,
+                    deadline_s=treq.deadline_s,
+                    ttft_budget_s=(treq.ttft_budget_s if not treq.tokens
+                                   else None),
+                    t_submit=treq.t_submit,
+                    ttft_observed=bool(treq.tokens))
+            except EngineSheddingError as e:
+                hint = e.retry_after_steps
+            except CapacityExceededError:
+                # static-config mismatch: no replica will ever take it
+                self._terminal(treq, "rejected")
+                return False
+            else:
+                treq.assignment = Assignment(replica.idx, erid, handle,
+                                             resume_base=len(treq.tokens))
+                treq.state = PLACED
+                treq.replicas.append(replica.idx)
+                self._engine_map[erid] = treq
+                return True
+        # refused (fleet full/shedding): bounded exponential backoff,
+        # seeded by the shed hint when the guard provided one
+        if replica is None:
+            treq.attempts += 1
+        treq.state = PENDING
+        if treq.attempts >= self.max_attempts:
+            self._terminal(treq, "rejected")
+            return False
+        delay = min(self.backoff_cap_ticks,
+                    max(hint, 1 << min(treq.attempts, 5)))
+        treq.next_retry_tick = self.ticks + delay
+        self.tracker.c_retries.inc()
+        return False
+
+    def _terminal(self, treq: TrackedRequest, reason: str) -> None:
+        if self.journal is not None:
+            self.journal.append("terminal", rid=treq.rid, reason=reason,
+                                n_tokens=len(treq.tokens))
+        self.tracker.on_terminal(treq, reason)
+
+    # -- failure handling --------------------------------------------------
+
+    def _fail(self, replica: ReplicaHandle, why: str) -> None:
+        """Crash or hang: take the replica out of rotation and fail its
+        in-flight requests over to survivors (recompute contract in the
+        module docstring)."""
+        replica.state = DEAD if why == "crash" else HUNG
+        (self.c_crashed if why == "crash" else self.c_hung).inc()
+        self.g_alive.set(len(self.alive))
+        if self.journal is not None:
+            self.journal.append("replica", replica=replica.idx,
+                                event=why, tick=self.ticks)
+        for treq in self.tracker.assigned_to(replica.idx):
+            asg = treq.assignment
+            if why == "hang":
+                replica.revoked.append(asg.engine_rid)
+            self._engine_map.pop(asg.engine_rid, None)
+            treq.assignment = None
+            treq.state = PENDING
+            treq.n_failovers += 1
+            self.tracker.c_failovers.inc()
+            self._try_place(treq, reason=why)
+
+    def _resume(self, replica: ReplicaHandle) -> None:
+        """A hung replica's device came back: revoke the requests that
+        already failed over (their blocks/pins free; stale vectors go
+        epoch-dead) and rejoin the routing pool empty."""
+        for erid in replica.revoked:
+            replica.engine.cancel(erid, reason=FINISH_FAILOVER)
+        replica.revoked.clear()
+        replica.state = SERVING
+        replica.last_beat_tick = self.ticks
+        replica.last_beat_t = self.clock()
+        self.g_alive.set(len(self.alive))
+        if self.journal is not None:
+            self.journal.append("replica", replica=replica.idx,
+                                event="resume", tick=self.ticks)
+
+    # -- the supervision tick ---------------------------------------------
+
+    def tick(self) -> None:
+        t = self.ticks
+        # 1. fleet fault plan
+        if self.faults is not None:
+            self.faults.begin_step(t)
+            for idx in self.faults.take_replica_crashes():
+                r = self.replicas[idx]
+                if r.state != DEAD:
+                    self._fail(r, "crash")
+            stalled = self.faults.replica_hang_targets()
+        else:
+            stalled = set()
+        for r in self.replicas:
+            r.stalled = r.idx in stalled and r.state != DEAD
+            if r.state == HUNG and not r.stalled:
+                self._resume(r)
+        # 2. step-watchdog: heartbeats only (the injected stall above is
+        # the *cause*; this is the generic detector)
+        now = self.clock()
+        for r in self.replicas:
+            if r.state != SERVING or not r.has_work():
+                continue
+            stale_ticks = t - max(r.last_beat_tick, 0)
+            stale_s = now - r.last_beat_t if r.last_beat_t else 0.0
+            if stale_ticks > self.hang_grace_ticks or \
+                    (self.hang_timeout_s is not None and
+                     stale_s > self.hang_timeout_s):
+                self._fail(r, "hang")
+        # 3. pending queue: deadlines first, then expired backoffs
+        for treq in self.tracker.live():
+            if treq.state != PENDING:
+                continue
+            if (treq.deadline_s is not None and
+                    now - treq.t_submit >= treq.deadline_s) or \
+                    (treq.ttft_budget_s is not None and not treq.tokens and
+                     now - treq.t_submit >= treq.ttft_budget_s):
+                self._terminal(treq, FINISH_DEADLINE)
+            elif t >= treq.next_retry_tick:
+                self._try_place(treq, reason="retry")
+        # 4. step + drain serving replicas (heartbeat on success; an
+        # unhandled engine exception is an organic crash)
+        active = [r for r in self.replicas
+                  if r.state == SERVING and not r.stalled]
+        stepping = [r for r in active if r.has_work()]
+        if self.step_parallel and len(stepping) > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=len(self.replicas))
+            errs = list(self._pool.map(self._step_one, stepping))
+        else:
+            errs = [self._step_one(r) for r in stepping]
+        for r, err in zip(stepping, errs):
+            if err is not None:
+                self._fail(r, "crash")
+        beat_t = self.clock()
+        for r in active:
+            if r.state != SERVING:
+                continue                 # crashed while stepping
+            r.last_beat_tick = t
+            r.last_beat_t = beat_t
+        # 5. pump tokens + terminal states (replica order: deterministic
+        # journal), then 6. invariants on every surviving pool
+        for r in self.replicas:
+            if r.state == SERVING and not r.stalled:
+                self._pump(r)
+        if self.check_invariants_each_tick:
+            for r in self.replicas:
+                if r.state == SERVING:
+                    check_invariants(r.engine.pool, r.engine.prefix_cache)
+        self.ticks += 1
+
+    @staticmethod
+    def _step_one(replica: ReplicaHandle) -> Optional[Exception]:
+        try:
+            replica.engine.step()
+            replica.engine.drain()
+        except Exception as e:          # noqa: BLE001 — any engine death
+            return e                    # is a replica crash
+        return None
+
+    def _pump(self, replica: ReplicaHandle) -> None:
+        """Publish this replica's freshly materialized tokens and terminal
+        states to the journal + tracker. Token progress is read from the
+        engine Request handles by POSITION (fleet position = resume_base +
+        engine index), so an engine-internal preemption-recompute — which
+        resets the handle's token list and regenerates the identical
+        greedy prefix — never re-streams tokens the client already has."""
+        for treq in self.tracker.assigned_to(replica.idx):
+            asg = treq.assignment
+            have = len(treq.tokens)
+            total = asg.resume_base + len(asg.handle.tokens)
+            if total > have:
+                new = [int(x) for x in
+                       asg.handle.tokens[have - asg.resume_base:]]
+                if self.journal is not None:
+                    self.journal.append("token", rid=treq.rid,
+                                        replica=replica.idx, pos=have,
+                                        toks=new)
+                self.tracker.on_tokens(treq, new)
+        for erid, req in replica.engine.pop_finished().items():
+            treq = self._engine_map.pop(erid, None)
+            if treq is None or req.finish_reason == FINISH_FAILOVER:
+                continue                 # revoked after failover, or not ours
+            if treq.state == DONE:
+                continue
+            self._terminal(treq, req.finish_reason)
+
+    # -- drive + observability --------------------------------------------
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> None:
+        while self.tracker.has_work():
+            if self.ticks >= max_ticks:
+                raise RuntimeError(
+                    f"fleet did not drain within {max_ticks} ticks")
+            self.tick()
+
+    def collect_metrics(self, prefix: str = ""):
+        """Fleet-aggregated registry: every replica's telemetry registry
+        (dead replicas included — their history is still truth) folded
+        with the tracker's fleet registry via MetricRegistry.collect."""
+        from repro.serve.metrics import MetricRegistry
+        regs = [r.engine.telemetry.registry for r in self.replicas
+                if r.engine.telemetry is not None]
+        regs.append(self.tracker.registry)
+        return MetricRegistry().collect(*regs, prefix=prefix)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        if self.journal is not None:
+            self.journal.close()

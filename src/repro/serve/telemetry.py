@@ -338,10 +338,16 @@ class Telemetry:
     def on_first_token(self, req) -> None:
         # observe TTFT once per request: a preempted request's re-delivered
         # first token is not a second TTFT sample (only DECODING requests
-        # are ever preempted, so n_preemptions > 0 implies a prior join)
+        # are ever preempted, so n_preemptions > 0 implies a prior join).
+        # A request migrated from a dead replica arrives with
+        # ttft_observed=True — its fleet-wide first token already streamed
+        # from the old replica, so this replica's registry must not add a
+        # second sample (fleet aggregation via MetricRegistry.collect
+        # would double-count it)
         tr = self._trace(req)
-        first = (not tr.t_first_token) if tr is not None \
-            else (req.n_preemptions == 0)
+        first = ((not tr.t_first_token) if tr is not None
+                 else (req.n_preemptions == 0)) and \
+            not getattr(req, "ttft_observed", False)
         if first:
             self.h_ttft.observe(req.t_first_token - req.t_submit)
         if tr is not None:

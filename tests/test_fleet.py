@@ -1,0 +1,478 @@
+"""Fleet serving layer (PR 9): async front-end (serve/frontend.py),
+prefix-affinity routing (serve/router.py), replica supervision with
+journaled failover (serve/supervisor.py, serve/journal.py), and the
+cross-replica telemetry contracts (TTFT once fleet-wide, E2E from the
+original submit, collect() aggregation surviving a replica death)."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config, model_fns, reduce_config
+from repro.serve import (ContinuousEngine, EngineGuard, EngineSheddingError,
+                         FaultInjector, FaultPlan, FaultSpec, FleetSupervisor,
+                         GuardConfig, GuardSignals, Journal, JournalCorrupt,
+                         ManualClock, MetricRegistry, RequestTracker, Router,
+                         Telemetry, canned_fleet_plan, leaked_blocks, replay)
+from repro.serve.frontend import AsyncFrontend
+from repro.serve.guard import SHEDDING
+from repro.serve.supervisor import DEAD, SERVING
+
+_rng = np.random.default_rng(41)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("qwen3-4b"))
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("block_size", 8)
+    kw.setdefault("num_blocks", 24)
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("retry_backoff_s", 0.0)
+    return ContinuousEngine(cfg, params, **kw)
+
+
+def _prompt(cfg, n):
+    return _rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _reference_streams(cfg, params, prompts, max_new, **kw):
+    """Greedy streams of an unfailed single-engine run (the byte-identity
+    oracle: placement never changes greedy output)."""
+    eng = _engine(cfg, params, **kw)
+    handles = [eng.submit(p, max_new) for p in prompts]
+    res = eng.run()
+    return [list(res[h.req_id].tokens) for h in handles]
+
+
+# ---------------------------------------------------------------------------
+# Journal: record validation + replay invariants (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestJournal:
+    def test_append_validates_kind_and_file_roundtrip(self, tmp_path):
+        p = tmp_path / "wal.jsonl"
+        j = Journal(path=str(p), clock=ManualClock(tick=0.5))
+        with pytest.raises(ValueError, match="unknown journal record"):
+            j.append("telegram", rid=0)
+        j.append("submit", rid=0, prompt_len=4, max_new=2, prompt=[1, 2, 3, 4])
+        j.append("placement", rid=0, replica=1, engine_rid=0, attempt=0,
+                 reason="submit", resume_base=0)
+        j.append("token", rid=0, replica=1, pos=0, toks=[7, 8])
+        j.append("terminal", rid=0, reason="length", n_tokens=2)
+        j.close()
+        loaded = Journal.load(str(p))
+        assert loaded.records == j.records       # WAL is flushed per append
+        st = loaded.replay()
+        assert st.requests[0].tokens == [7, 8]
+        assert st.requests[0].finish_reason == "length"
+        assert st.requests[0].placements[0]["reason"] == "submit"
+        assert st.terminal.keys() == {0}
+
+    def test_replay_rejects_impossible_histories(self):
+        base = [dict(kind="submit", rid=0, prompt_len=4, max_new=4, t=0.0)]
+        with pytest.raises(JournalCorrupt, match="pos 2"):
+            replay(base + [dict(kind="token", rid=0, replica=0, pos=2,
+                                toks=[1], t=0.1)])
+        with pytest.raises(JournalCorrupt, match="terminal claims"):
+            replay(base + [dict(kind="terminal", rid=0, reason="length",
+                                n_tokens=3, t=0.1)])
+        with pytest.raises(JournalCorrupt, match="after its terminal"):
+            replay(base
+                   + [dict(kind="terminal", rid=0, reason="length",
+                           n_tokens=0, t=0.1),
+                      dict(kind="token", rid=0, replica=0, pos=0, toks=[1],
+                           t=0.2)])
+        with pytest.raises(JournalCorrupt, match="submitted twice"):
+            replay(base + base)
+        with pytest.raises(JournalCorrupt, match="unknown request"):
+            replay([dict(kind="token", rid=9, replica=0, pos=0, toks=[1],
+                         t=0.0)])
+
+    def test_failover_count_from_placements(self):
+        st = replay([
+            dict(kind="submit", rid=0, prompt_len=2, max_new=4, t=0.0),
+            dict(kind="placement", rid=0, replica=0, engine_rid=0,
+                 attempt=0, reason="submit", resume_base=0, t=0.0),
+            dict(kind="placement", rid=0, replica=1, engine_rid=1,
+                 attempt=1, reason="crash", resume_base=2, t=0.2),
+        ])
+        assert st.requests[0].n_failovers == 1
+
+
+# ---------------------------------------------------------------------------
+# AsyncStream + AsyncFrontend (asyncio surface)
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncFrontend:
+    def test_stream_and_typed_result(self, setup):
+        cfg, params = setup
+        prompt = _prompt(cfg, 8)
+        ref = _reference_streams(cfg, params, [prompt], 4)[0]
+        sup = FleetSupervisor([_engine(cfg, params) for _ in range(2)])
+        fe = AsyncFrontend(sup)
+
+        async def drive():
+            stream = await fe.submit(prompt, 4)
+            driver = asyncio.ensure_future(fe.run())
+            got = [tok async for tok in stream]
+            fe.close()
+            await driver
+            return got, stream.result()
+
+        got, result = asyncio.run(drive())
+        assert got == ref == result.tokens
+        assert result.ok and result.finish_reason == "length"
+        assert result.n_failovers == 0 and len(result.replicas) == 1
+
+    def test_run_until_drained_sync_consumption(self, setup):
+        cfg, params = setup
+        prompts = [_prompt(cfg, 8) for _ in range(3)]
+        ref = _reference_streams(cfg, params, prompts, 4)
+        sup = FleetSupervisor([_engine(cfg, params) for _ in range(2)])
+        fe = AsyncFrontend(sup)
+
+        async def drive():
+            streams = [await fe.submit(p, 4) for p in prompts]
+            await fe.run_until_drained()
+            return streams
+
+        streams = asyncio.run(drive())
+        assert [s.drain_nowait() for s in streams] == ref
+        assert all(s.finished for s in streams)
+
+
+# ---------------------------------------------------------------------------
+# Router: affinity, demotion, skipping, round-robin
+# ---------------------------------------------------------------------------
+
+
+class TestRouter:
+    def _fleet(self, cfg, params, n=3):
+        return FleetSupervisor([_engine(cfg, params) for _ in range(n)])
+
+    def test_affinity_prefers_the_replica_holding_the_prefix(self, setup):
+        cfg, params = setup
+        sup = self._fleet(cfg, params)
+        prompt = _prompt(cfg, 16)
+        # serve the prompt once through replica 1 only, so only its radix
+        # tree holds the prefix
+        sup.replicas[1].engine.submit(prompt, 2)
+        sup.replicas[1].engine.run()
+        follow_up = np.concatenate([prompt, _prompt(cfg, 4)])
+        r = Router("affinity")
+        chosen = r.place(follow_up, sup.replicas)
+        assert chosen.idx == 1
+        assert r.decisions[-1].affinity_tokens >= 8   # >= one block
+
+    def test_cold_fleet_falls_back_to_load_then_budget(self, setup):
+        cfg, params = setup
+        sup = self._fleet(cfg, params)
+        # load replica 0 with queued work: the cold prompt must avoid it
+        sup.replicas[0].engine.submit(_prompt(cfg, 8), 4)
+        r = Router("affinity")
+        chosen = r.place(_prompt(cfg, 8), sup.replicas)
+        assert chosen.idx != 0
+        assert r.decisions[-1].affinity_tokens == 0
+
+    def test_degraded_is_demoted_shedding_and_dead_are_skipped(self, setup):
+        cfg, params = setup
+        guards = [EngineGuard(), EngineGuard(), EngineGuard()]
+        engines = [_engine(cfg, params, guard=g) for g in guards]
+        sup = FleetSupervisor(engines)
+        prompt = _prompt(cfg, 16)
+        # replica 0 holds the prefix but is DEGRADED: healthy replicas win
+        engines[0].submit(prompt, 2)
+        engines[0].run()
+        guards[0].observe(GuardSignals(pool_util=0.9))
+        r = Router("affinity")
+        assert r.place(prompt, sup.replicas).idx != 0
+        assert not r.decisions[-1].demoted
+        # all healthy candidates gone: the degraded one is still usable
+        guards[1].observe(GuardSignals(pool_util=1.0))   # SHEDDING
+        sup.replicas[2].state = DEAD
+        chosen = r.place(prompt, sup.replicas)
+        assert chosen.idx == 0 and r.decisions[-1].demoted
+        # nothing accepting at all -> None
+        guards[0].observe(GuardSignals(pool_util=1.0))
+        assert r.place(prompt, sup.replicas) is None
+
+    def test_round_robin_cycles_over_accepting_replicas(self, setup):
+        cfg, params = setup
+        sup = self._fleet(cfg, params)
+        r = Router("round-robin")
+        order = [r.place(_prompt(cfg, 4), sup.replicas).idx
+                 for _ in range(6)]
+        assert order == [0, 1, 2, 0, 1, 2]
+        sup.replicas[1].state = DEAD
+        order = [r.place(_prompt(cfg, 4), sup.replicas).idx
+                 for _ in range(4)]
+        assert order == [0, 2, 0, 2]
+        with pytest.raises(ValueError, match="unknown routing policy"):
+            Router("dartboard")
+
+
+# ---------------------------------------------------------------------------
+# Failover: crash, hang+resume, byte-identical streams, journal replay
+# ---------------------------------------------------------------------------
+
+
+class TestFailover:
+    def test_crash_replaces_in_flight_requests_byte_identically(
+            self, setup, tmp_path):
+        cfg, params = setup
+        prompts = [_prompt(cfg, 8) for _ in range(6)]
+        ref = _reference_streams(cfg, params, prompts, 8)
+        jr = Journal(path=str(tmp_path / "wal.jsonl"))
+        sup = FleetSupervisor(
+            [_engine(cfg, params) for _ in range(3)],
+            journal=jr,
+            faults=FaultInjector(canned_fleet_plan(crash_tick=2,
+                                                   hang_tick=None)),
+            check_invariants_each_tick=True)
+        treqs = [sup.submit(p, 8) for p in prompts]
+        sup.run_until_drained(max_ticks=500)
+        assert [t.result.tokens for t in treqs] == ref
+        assert all(t.result.ok for t in treqs)
+        assert sup.replicas[0].state == DEAD
+        assert sup.c_crashed.value == 1
+        assert sup.g_alive.value == 2
+        # the crash actually displaced work (the failover path ran)
+        moved = [t for t in treqs if t.n_failovers]
+        assert moved and all(0 in t.replicas and t.replicas[-1] != 0
+                             for t in moved)
+        assert sup.tracker.c_failovers.value == len(moved)
+        # zero leaked blocks on every SURVIVING pool
+        for r in sup.replicas:
+            if r.state == SERVING:
+                assert leaked_blocks(r.engine.pool,
+                                     r.engine.prefix_cache) == 0
+        # journal replay reconstructs the tracker's terminal state exactly
+        st = Journal.load(str(tmp_path / "wal.jsonl")).replay()
+        for t in treqs:
+            assert st.requests[t.rid].tokens == t.result.tokens
+            assert st.requests[t.rid].finish_reason == \
+                t.result.finish_reason
+            assert st.requests[t.rid].n_failovers == t.n_failovers
+        assert [e["event"] for e in st.replica_events] == ["crash"]
+
+    def test_hang_watchdog_fails_over_then_replica_rejoins(self, setup):
+        cfg, params = setup
+        prompts = [_prompt(cfg, 8) for _ in range(4)]
+        ref = _reference_streams(cfg, params, prompts, 10)
+        sup = FleetSupervisor(
+            [_engine(cfg, params) for _ in range(2)],
+            faults=FaultInjector(canned_fleet_plan(
+                crash_tick=10_000,        # no crash in this test
+                hang_tick=2, hang_ticks=8, hang_replica=1)),
+            hang_grace_ticks=2, check_invariants_each_tick=True)
+        treqs = [sup.submit(p, 10) for p in prompts]
+        sup.run_until_drained(max_ticks=500)
+        assert [t.result.tokens for t in treqs] == ref
+        assert sup.c_hung.value == 1
+        hung = sup.replicas[1]
+        assert hung.state == SERVING and not hung.revoked
+        # the revoked requests were cancelled on resume: no leaks, and the
+        # replica is empty and placeable again
+        assert leaked_blocks(hung.engine.pool, hung.engine.prefix_cache) == 0
+        assert not hung.engine.sched.has_work()
+        t_new = sup.submit(prompts[0], 2)
+        sup.run_until_drained(max_ticks=100)
+        assert t_new.result.ok
+
+    def test_organic_engine_death_is_a_crash(self, setup):
+        cfg, params = setup
+        prompts = [_prompt(cfg, 8) for _ in range(4)]
+        ref = _reference_streams(cfg, params, prompts, 6)
+        engines = [_engine(cfg, params, step_fault_retries=0)
+                   for _ in range(2)]
+        # replica 0's pool raises an unabsorbed TransientFault mid-serve:
+        # the supervisor must treat the unhandled engine exception as a
+        # replica crash and fail its work over
+        engines[0].attach_faults(FaultInjector(FaultPlan(seed=0, specs=[
+            FaultSpec("step_fault", step=1, duration=50)])))
+        sup = FleetSupervisor(engines)
+        treqs = [sup.submit(p, 6) for p in prompts]
+        sup.run_until_drained(max_ticks=500)
+        assert [t.result.tokens for t in treqs] == ref
+        assert sup.replicas[0].state == DEAD
+        assert sup.c_crashed.value == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: TTFT observed once fleet-wide, E2E from original submit
+# ---------------------------------------------------------------------------
+
+
+class TestMigrationStamps:
+    def test_ttft_once_and_e2e_from_original_submit(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        tel_a = Telemetry(clock=clock)
+        tel_b = Telemetry(clock=clock)
+        eng_a = _engine(cfg, params, telemetry=tel_a, clock=clock)
+        eng_b = _engine(cfg, params, telemetry=tel_b, clock=clock)
+        prompt = _prompt(cfg, 8)
+        ref = _reference_streams(cfg, params, [prompt], 6)[0]
+        h = eng_a.submit(prompt, 6)
+        t_submit = h.t_submit
+        for _ in range(6):                  # until first token(s) stream
+            eng_a.step()
+            eng_a.drain()
+            if h.tokens:
+                break
+        emitted = list(h.tokens)
+        assert emitted and tel_a.registry.get("serve_ttft_seconds").count == 1
+        # replica A dies; one second later the survivor takes the request
+        # with the migration stamps
+        clock.advance(1.0)
+        h2 = eng_b.submit(
+            np.concatenate([prompt, np.asarray(emitted, np.int32)]),
+            6 - len(emitted), t_submit=t_submit, ttft_observed=True)
+        assert h2.t_submit == t_submit       # deadline/E2E base survives
+        res = eng_b.run()
+        assert emitted + list(res[h2.req_id].tokens) == ref
+        # fleet aggregation: exactly ONE TTFT sample across both replicas,
+        # and the single E2E sample spans the migration gap (measured from
+        # the ORIGINAL submit, not the re-placement)
+        agg = MetricRegistry().collect(tel_a.registry, tel_b.registry)
+        assert agg.get("serve_ttft_seconds").count == 1
+        assert agg.get("serve_e2e_seconds").count == 1
+        assert agg.get("serve_e2e_seconds").sum >= 1.0
+
+    def test_fleet_ttft_counts_survive_crash(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        tels = [Telemetry(clock=clock) for _ in range(3)]
+        engines = [_engine(cfg, params, telemetry=t, clock=clock)
+                   for t in tels]
+        sup = FleetSupervisor(
+            engines, clock=clock,
+            faults=FaultInjector(canned_fleet_plan(crash_tick=2,
+                                                   hang_tick=None)))
+        prompts = [_prompt(cfg, 8) for _ in range(6)]
+        treqs = [sup.submit(p, 8) for p in prompts]
+        sup.run_until_drained(max_ticks=500)
+        assert any(t.n_failovers for t in treqs)
+        # tracker-level (fleet truth): one TTFT + one E2E per request
+        assert sup.tracker.h_ttft.count == len(prompts)
+        assert sup.tracker.h_e2e.count == len(prompts)
+        # replica-level via collect(): migrated requests were NOT observed
+        # twice, and E2E samples exist only on the finishing replica
+        agg = sup.collect_metrics()
+        assert agg.get("serve_ttft_seconds").count == len(prompts)
+        assert agg.get("serve_e2e_seconds").count == len(prompts)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: collect()/Histogram.merge under live failover
+# ---------------------------------------------------------------------------
+
+
+class TestCollectUnderFailover:
+    def test_fleet_aggregate_equals_per_replica_sum_with_a_dead_replica(
+            self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        tels = [Telemetry(clock=clock) for _ in range(3)]
+        engines = [_engine(cfg, params, telemetry=t, clock=clock)
+                   for t in tels]
+        sup = FleetSupervisor(
+            engines, clock=clock,
+            faults=FaultInjector(canned_fleet_plan(crash_tick=2,
+                                                   hang_tick=None)))
+        treqs = [sup.submit(_prompt(cfg, 8), 8) for _ in range(6)]
+        sup.run_until_drained(max_ticks=500)
+        assert sup.replicas[0].state == DEAD
+        agg = sup.collect_metrics()
+        # extensive metrics: the fleet aggregate is EXACTLY the sum over
+        # per-replica registries — the dead replica's history included,
+        # nothing lost, nothing double-counted
+        for name in ("serve_requests_submitted_total",
+                     "serve_requests_finished_total"):
+            per = [t.registry.get(name).value
+                   for t in tels if t.registry.get(name)]
+            assert agg.get(name).value == sum(per) > 0, name
+        for name in ("serve_ttft_seconds", "serve_e2e_seconds",
+                     "serve_queue_wait_seconds"):
+            per = [t.registry.get(name) for t in tels
+                   if t.registry.get(name)]
+            assert agg.get(name).count == sum(h.count for h in per), name
+            assert agg.get(name).sum == pytest.approx(
+                sum(h.sum for h in per)), name
+        # engine-rid submissions: every successful placement (incl.
+        # failovers) shows up on exactly one replica
+        assert agg.get("serve_requests_submitted_total").value == \
+            sum(len(t.replicas) for t in treqs)
+        # completion count is fleet-wide exact despite the mid-window death
+        assert agg.get("serve_requests_finished_total").value == len(treqs)
+        # prefix restriction still works across the fleet
+        only = sup.collect_metrics(prefix="fleet_")
+        assert only.get("fleet_requests_completed_total").value == len(treqs)
+        assert only.get("serve_ttft_seconds") is None
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: the shedding backoff hint
+# ---------------------------------------------------------------------------
+
+
+class TestSheddingBackoffHint:
+    def test_guard_hint_tracks_the_clean_streak(self):
+        g = EngineGuard(GuardConfig(recover_steps=3))
+        g.observe(GuardSignals(pool_util=1.0))
+        assert g.state == SHEDDING and g.retry_after_steps() == 3
+        g.observe(GuardSignals())
+        assert g.retry_after_steps() == 2
+        g.observe(GuardSignals(pool_util=1.0))   # dirty: streak resets
+        assert g.retry_after_steps() == 3
+
+    def test_engine_raises_with_machine_readable_hint(self, setup):
+        cfg, params = setup
+        guard = EngineGuard(GuardConfig(pool_util_degraded=0.01,
+                                        pool_util_shedding=0.02,
+                                        recover_steps=4))
+        eng = _engine(cfg, params, guard=guard, prefix_cache=False)
+        eng.submit(_prompt(cfg, 8), 4)
+        eng.step()
+        assert guard.state == SHEDDING
+        with pytest.raises(EngineSheddingError) as ei:
+            eng.submit(_prompt(cfg, 8), 4)
+        assert ei.value.retry_after_steps == 4
+        assert "4 clean steps" in str(ei.value)
+
+    def test_supervisor_backoff_rides_the_hint_then_rejects(self, setup):
+        cfg, params = setup
+        guard = EngineGuard(GuardConfig(recover_steps=5))
+        guard.observe(GuardSignals(pool_util=1.0))    # SHEDDING, no work:
+        eng = _engine(cfg, params, guard=guard)       # stays shedding
+        sup = FleetSupervisor([eng], max_attempts=3)
+        treq = sup.submit(_prompt(cfg, 8), 4)
+        assert treq.state == "pending"
+        assert treq.next_retry_tick > 0      # backoff armed
+        assert sup.tracker.c_retries.value == 1
+        sup.run_until_drained(max_ticks=200)
+        assert treq.result.finish_reason == "rejected"
+        assert not treq.result.ok
+        assert sup.tracker.c_failed.value == 1
+
+    def test_pending_deadline_enforced_by_the_supervisor(self, setup):
+        cfg, params = setup
+        clock = ManualClock(tick=0.001)
+        guard = EngineGuard(GuardConfig(recover_steps=5))
+        guard.observe(GuardSignals(pool_util=1.0))
+        eng = _engine(cfg, params, guard=guard, clock=clock)
+        sup = FleetSupervisor([eng], clock=clock, max_attempts=100)
+        treq = sup.submit(_prompt(cfg, 8), 4, deadline_s=0.5)
+        clock.advance(1.0)
+        sup.tick()
+        assert treq.result.finish_reason == "deadline"

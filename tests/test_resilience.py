@@ -65,8 +65,16 @@ class TestFaultPlan:
         plan.save(str(p))
         assert FaultPlan.load(str(p)) == plan
 
-    def test_canned_plan_covers_every_kind(self):
-        assert {s.kind for s in canned_plan().specs} == set(FAULT_KINDS)
+    def test_canned_plans_cover_every_kind(self):
+        from repro.serve.faults import (ENGINE_FAULT_KINDS,
+                                        FLEET_FAULT_KINDS,
+                                        canned_fleet_plan)
+        assert {s.kind for s in canned_plan().specs} == \
+            set(ENGINE_FAULT_KINDS)
+        assert {s.kind for s in canned_fleet_plan().specs} == \
+            set(FLEET_FAULT_KINDS)
+        assert set(ENGINE_FAULT_KINDS) | set(FLEET_FAULT_KINDS) == \
+            set(FAULT_KINDS)
 
 
 class TestFaultInjector:
@@ -132,8 +140,10 @@ class TestFaultInjector:
         p = tmp_path / "replay.json"
         inj.save_log(str(p))
         doc = json.loads(p.read_text())
+        from repro.serve.faults import ENGINE_FAULT_KINDS
         assert FaultPlan.from_json(json.dumps(doc["plan"])) == canned_plan()
-        assert {e["kind"] for e in doc["injections"]} == set(FAULT_KINDS)
+        assert {e["kind"] for e in doc["injections"]} == \
+            set(ENGINE_FAULT_KINDS)
 
 
 # ---------------------------------------------------------------------------
