@@ -55,7 +55,7 @@ def _entries():
     from benchmarks import (autotune_bench, decode_paged_bench, fleet_bench,
                             kv_int8_bench, prefill_paged_bench,
                             prefix_cache_bench, resilience_bench,
-                            serve_throughput)
+                            restore_bench, serve_throughput)
     return {
         "decode_paged": {
             "run": lambda: decode_paged_bench.main(["--smoke"]),
@@ -104,6 +104,15 @@ def _entries():
             "mode": lambda: "tick-model", "kind": "deterministic",
             "full": ("BENCH_fleet.json",
                      "scaling_ratio_fleet_over_single")},
+        "restore": {
+            # prefill tokens a cold restart recomputes per token the warm
+            # (snapshot-restored radix tree) restart computes — token
+            # counts are deterministic, so no timing-noise retries apply
+            "run": lambda: restore_bench.main(["--smoke"]),
+            "metric": "cold_over_warm_prefill_tokens",
+            "mode": lambda: "token-count", "kind": "deterministic",
+            "full": ("BENCH_restore.json",
+                     "cold_over_warm_prefill_tokens")},
     }
 
 

@@ -76,6 +76,10 @@ def main() -> None:
     from benchmarks import fleet_bench
     fleet_bench.main(["--smoke"] if args.fast else [])
 
+    print("# Restore — SIGKILL mid-workload, snapshot warm restart")
+    from benchmarks import restore_bench
+    restore_bench.main(["--smoke"] if args.fast else [])
+
     print("# Roofline (baseline sharding) — from dry-run artifacts")
     roofline_report.main()
 

@@ -36,8 +36,8 @@ def _serve_fleet(args, cfg, params, prompts, t0):
                              FleetSupervisor, Journal, Router, Telemetry,
                              canned_fleet_plan)
     want_tel = bool(args.telemetry or args.metrics_out)
-    engines = []
-    for _ in range(args.replicas):
+
+    def engine_factory():
         eng = ContinuousEngine(
             cfg, params, block_size=args.block_size,
             num_blocks=args.num_blocks, max_batch=args.batch,
@@ -52,7 +52,8 @@ def _serve_fleet(args, cfg, params, prompts, t0):
             telemetry=Telemetry() if want_tel else None,
             guard=EngineGuard() if args.guard else None)
         eng.warmup()
-        engines.append(eng)
+        return eng
+
     faults = None
     if args.fleet_fault_plan:
         plan = (canned_fleet_plan() if args.fleet_fault_plan == "canned"
@@ -60,10 +61,32 @@ def _serve_fleet(args, cfg, params, prompts, t0):
         faults = FaultInjector(plan)
         log.info("fleet fault injector attached: %d specs, seed %d",
                  len(plan.specs), plan.seed)
-    journal = Journal(path=args.journal_out)
-    sup = FleetSupervisor(engines, router=Router(args.router),
-                          journal=journal, faults=faults,
-                          step_parallel=True)
+    journal = Journal(path=args.journal_out, fsync=args.journal_fsync)
+    if args.resume:
+        # crash recovery: snapshot warm-restore per replica, then adopt
+        # every journaled request (terminal ones resolve immediately;
+        # in-flight ones resubmit via the recompute contract)
+        sup = FleetSupervisor.resume(
+            engine_factory, args.replicas, args.resume,
+            snapshot_dir=args.snapshot_dir, journal=journal,
+            router=Router(args.router), faults=faults,
+            step_parallel=True, snapshot_every=args.snapshot_every)
+        for info in sup.restore_info:
+            log.info("replica %d restore: %s (%s)", info["replica"],
+                     info["mode"], info["reason"])
+        log.info("resume: %d requests adopted (%d already terminal), "
+                 "%d torn-tail records lost",
+                 int(sup.tracker.c_recovered.value),
+                 sum(1 for t in sup.tracker.requests.values()
+                     if t.result is not None),
+                 int(sup.tracker.c_tail_lost.value))
+    else:
+        engines = [engine_factory() for _ in range(args.replicas)]
+        sup = FleetSupervisor(engines, router=Router(args.router),
+                              journal=journal, faults=faults,
+                              step_parallel=True,
+                              snapshot_dir=args.snapshot_dir,
+                              snapshot_every=args.snapshot_every)
     treqs = [sup.submit(p, args.max_new, temperature=args.temperature,
                         deadline_s=args.deadline_ms / 1e3 or None,
                         ttft_budget_s=args.ttft_budget_ms / 1e3 or None)
@@ -93,9 +116,16 @@ def _serve_fleet(args, cfg, params, prompts, t0):
         with open(args.metrics_out, "w") as f:
             f.write(agg.prometheus_text())
         log.info("fleet-aggregated metrics -> %s", args.metrics_out)
+    if args.snapshot_dir:
+        # final snapshot at quiescence: the next process warm-restarts
+        # with the full radix tree even after a clean shutdown
+        sup.save_snapshots()
+        log.info("durable snapshots (%d written this run) -> %s",
+                 int(sup.c_snapshots.value), args.snapshot_dir)
     if args.journal_out:
-        log.info("write-ahead journal (%d records) -> %s",
-                 len(journal.records), args.journal_out)
+        log.info("write-ahead journal (%d records, fsync=%s) -> %s",
+                 len(journal.records), args.journal_fsync,
+                 args.journal_out)
     sup.close()
     rows = [list(t.result.tokens) for t in treqs]
     return rows, dt
@@ -235,6 +265,39 @@ def main() -> None:
                          "FaultPlan JSON file, or the literal 'canned' "
                          "for the reference replica-crash + hang plan "
                          "(serve/faults.py canned_fleet_plan)")
+    ap.add_argument("--journal-fsync", choices=("none", "interval",
+                                                "always"),
+                    default="interval",
+                    help="journal durability policy: 'always' fsyncs "
+                         "every record (no tail loss, slowest), "
+                         "'interval' flushes per record and fsyncs "
+                         "periodically (default; bounded tail-loss "
+                         "window), 'none' leaves records in stdio "
+                         "buffers (fastest; a crash loses everything "
+                         "unflushed). Dropped-tail records surface as "
+                         "journal_tail_lost_total at recovery")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="fleet durability: write crash-consistent "
+                         "per-replica snapshots (serve/snapshot.py — "
+                         "KV pools, radix tree, scheduler queues, engine "
+                         "counters; atomic tmp+rename, per-section "
+                         "checksums) into this directory, plus one at "
+                         "clean drain. Implies the fleet path even with "
+                         "--replicas 1")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="fleet durability: snapshot every N supervision "
+                         "ticks (0 = only the final snapshot at drain); "
+                         "each snapshot also anchors the journal so "
+                         "replay cost is bounded by the suffix")
+    ap.add_argument("--resume", default=None, metavar="JOURNAL",
+                    help="crash recovery: rebuild the fleet from this "
+                         "prior write-ahead journal (+ --snapshot-dir "
+                         "snapshots when available — warm radix/pool "
+                         "restore with fsck fallback to cold), adopt "
+                         "every journaled request (terminal streams "
+                         "resolve from the journal; in-flight ones "
+                         "resubmit via the [prompt ‖ emitted] recompute "
+                         "contract), then serve the new workload")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -252,7 +315,8 @@ def main() -> None:
         prompts = rng.integers(1, cfg.vocab_size,
                                (args.batch, args.prompt_len)).astype(np.int32)
         t0 = time.time()
-        if args.engine == "paged" and args.replicas > 1:
+        if args.engine == "paged" and (args.replicas > 1 or
+                                       args.snapshot_dir or args.resume):
             rows, dt = _serve_fleet(args, cfg, params, prompts, t0)
         elif args.engine == "paged":
             want_tel = args.telemetry if args.telemetry is not None else \

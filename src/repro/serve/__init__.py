@@ -12,8 +12,9 @@ from repro.serve.guard import (GUARD_STATES, EngineGuard, EngineSheddingError,
                                GuardConfig, GuardSignals)
 from repro.serve.invariants import (InvariantViolation, check_invariants,
                                     leaked_blocks)
-from repro.serve.journal import (Journal, JournalCorrupt, ReplayedRequest,
-                                 ReplayState, replay)
+from repro.serve.journal import (FSYNC_POLICIES, Journal, JournalCorrupt,
+                                 ReplayedRequest, ReplayState, replay,
+                                 state_digest)
 from repro.serve.kernel_costs import (CostParams, LaunchCost,
                                       decode_launch_cost, estimate_seconds,
                                       prefill_launch_cost)
@@ -28,7 +29,12 @@ from repro.serve.scheduler import (FINISH_CANCELLED, FINISH_DEADLINE,
                                    CapacityExceededError,
                                    DuplicateRequestError, EmptyPromptError,
                                    Request, Scheduler, SubmitError)
-from repro.serve.supervisor import FleetSupervisor, ReplicaHandle
+from repro.serve.snapshot import (Snapshot, SnapshotCorrupt, apply_snapshot,
+                                  engine_fingerprint, requeue_inflight,
+                                  restore_engine, snapshot_state,
+                                  write_snapshot)
+from repro.serve.supervisor import (FleetSupervisor, ReplicaHandle,
+                                    snapshot_path)
 from repro.serve.telemetry import (ManualClock, RequestTrace, StepTimeline,
                                    Telemetry)
 
@@ -57,4 +63,9 @@ __all__ = ["ContinuousEngine", "EngineMetrics", "GenerateResult",
            "RequestResult", "RequestTracker", "TrackedRequest",
            "Journal", "JournalCorrupt", "ReplayState", "ReplayedRequest",
            "replay", "ROUTING_POLICIES", "PlacementDecision", "Router",
-           "FleetSupervisor", "ReplicaHandle"]
+           "FleetSupervisor", "ReplicaHandle",
+           # durability layer (PR 10)
+           "FSYNC_POLICIES", "state_digest", "Snapshot", "SnapshotCorrupt",
+           "apply_snapshot", "engine_fingerprint", "requeue_inflight",
+           "restore_engine", "snapshot_state", "write_snapshot",
+           "snapshot_path"]

@@ -200,6 +200,12 @@ class RequestTracker:
         self.h_e2e = r.histogram(
             "fleet_e2e_seconds",
             "submit -> finish from the ORIGINAL submit (completions only)")
+        self.c_recovered = r.counter(
+            "fleet_requests_recovered_total",
+            "requests adopted from a prior process's journal at resume")
+        self.c_tail_lost = r.counter(
+            "journal_tail_lost_total",
+            "journal records dropped during crash recovery (torn tail)")
         self._next_rid = 0
 
     # -- lifecycle ---------------------------------------------------------
@@ -217,6 +223,40 @@ class RequestTracker:
                               stream=AsyncStream(rid))
         self.requests[rid] = treq
         self.c_submitted.inc()
+        return treq
+
+    def adopt(self, rid: int, prompt: np.ndarray, max_new: int,
+              tokens: List[int], finish_reason: str = "",
+              n_failovers: int = 0,
+              temperature: float = 0.0) -> TrackedRequest:
+        """Re-create a request from a prior process's journal, keeping its
+        rid.  Terminal requests (``finish_reason`` set) are resolved
+        immediately with the journaled stream; in-flight ones carry their
+        already-streamed tokens (``t_first_token`` pre-stamped so TTFT is
+        never observed twice — monotonic stamps don't survive process
+        death, so cross-process latency is not re-measured) and are ready
+        for placement through the failover path."""
+        if rid in self.requests:
+            raise ValueError(f"request {rid} already tracked")
+        treq = TrackedRequest(rid, np.asarray(prompt, np.int32), max_new,
+                              temperature, t_submit=self.clock(),
+                              stream=AsyncStream(rid))
+        treq.tokens = list(tokens)
+        treq.n_failovers = n_failovers
+        if treq.tokens:
+            treq.t_first_token = treq.t_submit  # suppress double TTFT
+            treq.stream.put(list(treq.tokens))
+        self.requests[rid] = treq
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.c_recovered.inc()
+        if finish_reason:
+            treq.state = DONE
+            treq.t_finish = self.clock()
+            treq.result = RequestResult(
+                rid, list(treq.tokens), finish_reason,
+                n_failovers=n_failovers, replicas=[],
+                t_submit=treq.t_submit, t_finish=treq.t_finish)
+            treq.stream.close(treq.result)
         return treq
 
     def on_tokens(self, treq: TrackedRequest, tokens: List[int]) -> None:

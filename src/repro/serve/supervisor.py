@@ -45,6 +45,7 @@ hint when one was raised and doubles per consecutive refusal, bounded by
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional
@@ -56,10 +57,15 @@ from repro.serve.frontend import (DONE, PENDING, PLACED, Assignment,
                                   RequestTracker, TrackedRequest)
 from repro.serve.guard import EngineSheddingError
 from repro.serve.invariants import check_invariants
-from repro.serve.journal import Journal
+from repro.serve.journal import Journal, state_digest
 from repro.serve.router import Router
 from repro.serve.scheduler import (FINISH_DEADLINE, FINISH_FAILOVER,
                                    FINISH_LENGTH, CapacityExceededError)
+
+
+def snapshot_path(snapshot_dir: str, replica_idx: int) -> str:
+    """Canonical per-replica snapshot file name inside a snapshot dir."""
+    return os.path.join(snapshot_dir, f"replica{replica_idx}.snap")
 
 # replica lifecycle (ReplicaHandle.state)
 SERVING, HUNG, DEAD = "serving", "hung", "dead"
@@ -108,7 +114,9 @@ class FleetSupervisor:
                  max_attempts: int = 8,
                  backoff_cap_ticks: int = 32,
                  check_invariants_each_tick: bool = False,
-                 step_parallel: bool = False):
+                 step_parallel: bool = False,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0):
         if not engines:
             raise ValueError("fleet needs at least one engine replica")
         self.replicas = [ReplicaHandle(i, e) for i, e in enumerate(engines)]
@@ -123,6 +131,9 @@ class FleetSupervisor:
         self.backoff_cap_ticks = backoff_cap_ticks
         self.check_invariants_each_tick = check_invariants_each_tick
         self.step_parallel = step_parallel
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.restore_info: List[Dict] = []   # set by resume()
         self.ticks = 0
         self._engine_map: Dict[int, TrackedRequest] = {}
         self._next_engine_rid = 0
@@ -136,6 +147,9 @@ class FleetSupervisor:
         self.g_alive = reg.gauge(
             "fleet_replicas_alive", "replicas currently accepting work")
         self.g_alive.set(len(self.replicas))
+        self.c_snapshots = reg.counter(
+            "fleet_snapshots_written_total",
+            "per-replica durable snapshots written to the snapshot dir")
 
     # -- front door --------------------------------------------------------
 
@@ -337,6 +351,12 @@ class FleetSupervisor:
             for r in self.replicas:
                 if r.state == SERVING:
                     check_invariants(r.engine.pool, r.engine.prefix_cache)
+        # 7. periodic durability: snapshot every replica + anchor the
+        # journal AFTER the pump, so the snapshot and the journaled
+        # streams describe the same instant
+        if (self.snapshot_dir and self.snapshot_every > 0 and
+                (t + 1) % self.snapshot_every == 0):
+            self.save_snapshots()
         self.ticks += 1
 
     @staticmethod
@@ -374,6 +394,105 @@ class FleetSupervisor:
             if treq.state == DONE:
                 continue
             self._terminal(treq, req.finish_reason)
+
+    # -- durability --------------------------------------------------------
+
+    def save_snapshots(self) -> List[Dict]:
+        """Write an atomic snapshot of every serving replica to the
+        snapshot dir, then append a snapshot-anchor record to the journal
+        (replay cost from the anchor on is bounded by the suffix).
+        Stalled/hung replicas are skipped — their device state is
+        unreadable; their requests fail over anyway."""
+        from repro.serve.snapshot import write_snapshot
+
+        if not self.snapshot_dir:
+            raise ValueError("supervisor has no snapshot_dir")
+        os.makedirs(self.snapshot_dir, exist_ok=True)
+        infos = []
+        for r in self.replicas:
+            if r.state != SERVING or r.stalled:
+                continue
+            infos.append(write_snapshot(
+                r.engine, snapshot_path(self.snapshot_dir, r.idx)))
+            self.c_snapshots.inc()
+        if self.journal is not None:
+            self.journal.anchor(tick=self.ticks,
+                                replicas=[i["path"] for i in infos])
+        return infos
+
+    @classmethod
+    def resume(cls, engine_factory: Callable[[], object], n_replicas: int,
+               journal_path: str,
+               snapshot_dir: Optional[str] = None,
+               journal: Optional[Journal] = None,
+               **kwargs) -> "FleetSupervisor":
+        """Rebuild a fleet after process death: snapshot + journal-suffix
+        recovery.
+
+        Per replica, the recovery ladder is: read + apply + fsck the
+        snapshot (warm start — the radix tree and pools survive, so
+        shared prefixes re-hit instead of re-prefilling); on checksum,
+        fingerprint, or invariant failure fall back to a cold engine from
+        the factory.  The journal is then the authoritative request
+        record: it is loaded with ``strict=False`` (a crash-torn tail
+        drops only the unsynced suffix, counted in
+        ``journal_tail_lost_total``), replayed from its last anchor, and
+        every journaled request is adopted — terminal ones resolve
+        immediately with their journaled streams; in-flight ones resubmit
+        through the PR 9 recompute contract (``[prompt ‖ emitted]``,
+        position-based dedup), which regenerates the byte-identical
+        remainder because greedy decode is deterministic.
+
+        ``journal`` is the NEW journal for the resumed process; its first
+        record is a seeding anchor embedding the recovered state, so the
+        new journal replays standalone.  Requires the prior journal to
+        have logged prompts (``log_prompts=True``) if any request was
+        still in flight.
+        """
+        from repro.serve.snapshot import requeue_inflight, restore_engine
+
+        old = Journal.load(journal_path, strict=False)
+        st = old.replay(from_anchor=True)
+
+        engines, restore_info = [], []
+        for i in range(n_replicas):
+            spath = (snapshot_path(snapshot_dir, i)
+                     if snapshot_dir else None)
+            engine, _specs, info = restore_engine(engine_factory, spath)
+            if info["mode"] == "warm":
+                # journal is authoritative for request state: drop the
+                # snapshot's queues (publishing their generated KV into
+                # the radix tree first — that's the warm-restart payoff)
+                # and let the adoption path below resubmit
+                requeue_inflight(engine)
+            engines.append(engine)
+            restore_info.append(dict(info, replica=i))
+
+        sup = cls(engines, journal=journal,
+                  snapshot_dir=snapshot_dir, **kwargs)
+        sup.restore_info = restore_info
+        if old.tail_lost:
+            sup.tracker.c_tail_lost.inc(old.tail_lost)
+        if sup.journal is not None:
+            # seeding anchor: the new journal replays standalone
+            sup.journal.append("snapshot", digest=state_digest(st),
+                               resumed_from=journal_path,
+                               tail_lost=old.tail_lost)
+
+        for rid in sorted(st.requests):
+            r = st.requests[rid]
+            if not r.finish_reason and r.prompt is None:
+                raise ValueError(
+                    f"request {rid} was in flight but the journal did not "
+                    f"log prompts; resume needs Journal(log_prompts=True)")
+            treq = sup.tracker.adopt(
+                rid, np.asarray(r.prompt if r.prompt is not None else [],
+                                np.int32),
+                r.max_new, r.tokens, finish_reason=r.finish_reason,
+                n_failovers=r.n_failovers)
+            if not r.finish_reason:
+                sup._try_place(treq, reason="restore")
+        return sup
 
     # -- drive + observability --------------------------------------------
 
